@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks.
+
+On this CPU container, interpret-mode timings measure the Python
+emulation (NOT TPU perf) — reported for completeness; `derived` carries
+the analytic FLOPs per call, which is the number the TPU roofline uses.
+The jnp reference path is timed as the XLA-CPU baseline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.group_threshold.ref import group_threshold_ref
+from repro.kernels.ista_step.ref import ista_step_ref
+
+
+def _time(fn, *args, reps=20):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # ista_step: p=512, r=512 (the M-matrix solve shape for p=512)
+    p = r = 512
+    A = jax.random.normal(key, (p, p))
+    Sigma = A @ A.T / p
+    beta = jax.random.normal(key, (p, r))
+    c = jax.random.normal(key, (p, r))
+    f = jax.jit(lambda S, b, cc: ista_step_ref(S, b, cc, 0.01, 0.1))
+    us = _time(f, Sigma, beta, c)
+    flops = 2 * p * p * r
+    rows.append(f"kernel_ista_step_p{p}_r{r},{us:.0f},flops={flops}")
+
+    # group_threshold: p=200000 rows x m=16
+    B = jax.random.normal(key, (200_000, 16))
+    f = jax.jit(lambda b: group_threshold_ref(b, 2.0))
+    us = _time(f, B)
+    rows.append(f"kernel_group_threshold_200k_x16,{us:.0f},bytes={B.size * 4}")
+
+    # flash attention fwd: S=2048, 8 heads, H=64
+    q = jax.random.normal(key, (1, 2048, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 2048, 8, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 2048, 8, 64), jnp.float32)
+    f = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+    us = _time(f, q, k, v, reps=5)
+    flops = 4 * 2048 * 2048 * 8 * 64  # qk + pv
+    rows.append(f"kernel_flash_attn_s2048_h8,{us:.0f},flops={flops}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

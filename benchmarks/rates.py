@@ -1,0 +1,69 @@
+"""Tables 1-2 rate sanity: empirical error scaling of DSML vs theory.
+
+Corollary 2 predicts estimation error ~ |S| * sqrt((m + log p)/n) to
+leading order: doubling n should shrink the error by ~sqrt(2) (slope -1/2
+on a log-log plot), and the per-task-normalized error should IMPROVE as m
+grows (the log(p)/m term) — the transfer benefit the paper is about.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dsml_fit, estimation_error, gen_regression
+
+
+def _dsml_err(key, m, n, p=200, s=10):
+    data = gen_regression(key, m=m, n=n, p=p, s=s, signal_low=0.3)
+    base = float(jnp.sqrt(jnp.log(float(p)) / n))
+    res = dsml_fit(data.Xs, data.ys, 4 * base, base, Lam=0.0)
+    norms = jnp.linalg.norm(res.beta_u.T, axis=-1)
+    Lam = float(jnp.quantile(norms, 0.95))
+    from repro.core import support_from_rows
+    sup = support_from_rows(res.beta_u.T, Lam)
+    B = (res.beta_u * sup[None, :]).T
+    return float(estimation_error(B, data.B)) / math.sqrt(m)
+
+
+def main(n_runs: int = 6, out_dir: str = "experiments/paper"):
+    t0 = time.time()
+    ns = (50, 100, 200)
+    errs_n = []
+    for n in ns:
+        e = np.mean([_dsml_err(jax.random.PRNGKey(i * 31), 10, n)
+                     for i in range(n_runs)])
+        errs_n.append(float(e))
+    # log-log slope vs n (theory: -1/2)
+    slope_n = float(np.polyfit(np.log(ns), np.log(errs_n), 1)[0])
+
+    ms = (2, 8, 24)
+    errs_m = []
+    for m in ms:
+        e = np.mean([_dsml_err(jax.random.PRNGKey(i * 17 + 5), m, 80)
+                     for i in range(n_runs)])
+        errs_m.append(float(e))
+
+    rec = {"ns": ns, "errs_vs_n": errs_n, "slope_vs_n": slope_n,
+           "ms": ms, "normalized_errs_vs_m": errs_m,
+           "m_transfer_benefit": errs_m[0] > errs_m[-1]}
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "rates.json"), "w") as f:
+        json.dump(rec, f, indent=2)
+    dt = (time.time() - t0) * 1e6 / 6
+    return [
+        f"rates_slope_vs_n,{dt:.0f},{slope_n:.3f}(theory -0.5)",
+        f"rates_err_m2,{dt:.0f},{errs_m[0]:.3f}",
+        f"rates_err_m24,{dt:.0f},{errs_m[-1]:.3f}",
+        f"rates_transfer_benefit,{dt:.0f},{rec['m_transfer_benefit']}",
+    ]
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

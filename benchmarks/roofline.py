@@ -1,0 +1,59 @@
+"""Roofline report: reads the dry-run artifacts (experiments/dryrun/) and
+prints/persists the per-(arch x shape x mesh) three-term table used by
+EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(path: str = None):
+    if path is None:
+        import os
+        path = "experiments/dryrun_final" if os.path.isdir(
+            "experiments/dryrun_final") else "experiments/dryrun"
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def table(recs, mesh: str = "16x16"):
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], r["status"], "-", "-", "-",
+                         "-", "-", r.get("note", "")))
+            continue
+        rf = r["roofline"]
+        rows.append((
+            r["arch"], r["shape"], rf["bottleneck"],
+            f"{rf['compute_s']:.4f}", f"{rf['memory_s']:.4f}",
+            f"{rf['collective_s']:.4f}", f"{r['useful_ratio']:.2f}",
+            f"{r['model_flops']:.3e}", r.get("note", "")))
+    return rows
+
+
+def main():
+    recs = load_records()
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        n_ok = sum(1 for r in recs if r.get("mesh") == mesh
+                   and r["status"] == "ok")
+        n_skip = sum(1 for r in recs if r.get("mesh") == mesh
+                     and r["status"] == "skipped")
+        out.append(f"dryrun_{mesh}_ok,{0},{n_ok}")
+        out.append(f"dryrun_{mesh}_skipped,{0},{n_skip}")
+    for arch, shape, bott, c, m, coll, ur, mf, note in table(recs):
+        out.append(f"roofline_{arch}_{shape},{0},"
+                   f"bottleneck={bott};compute={c};memory={m};"
+                   f"collective={coll};useful={ur}")
+    return out
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,67 @@
+"""Benchmark driver: one section per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (the repo contract). Heavy
+experiment sweeps persist JSON artifacts under experiments/paper/.
+
+  fig1   — paper Figure 1 (regression, vary n / vary m)
+  fig2   — paper Figure 2 (classification, vary n / vary m)
+  comm   — paper Table 1 communication column (+ one-round HLO proof)
+  rates  — Tables 1-2 rate sanity (error scaling vs n and m)
+  kern   — kernel microbenches
+  roof   — dry-run / roofline summary (reads experiments/dryrun)
+
+Usage: python -m benchmarks.run [--only fig1,comm] [--runs N]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,fig2,comm,rates,kern,roof")
+    ap.add_argument("--runs", type=int, default=5,
+                    help="averaging runs for the paper sweeps")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    sections = []
+    if want is None or "comm" in want:
+        from benchmarks.communication import main as comm_main
+        sections.append(("comm", comm_main))
+    if want is None or "kern" in want:
+        from benchmarks.kernels_bench import main as kern_main
+        sections.append(("kern", kern_main))
+    if want is None or "rates" in want:
+        from benchmarks.rates import main as rates_main
+        sections.append(("rates",
+                         lambda: rates_main(n_runs=max(3, args.runs // 2))))
+    if want is None or "fig1" in want:
+        from benchmarks.fig1_regression import main as fig1_main
+        sections.append(("fig1", lambda: fig1_main(n_runs=args.runs)))
+    if want is None or "fig2" in want:
+        from benchmarks.fig2_classification import main as fig2_main
+        sections.append(("fig2", lambda: fig2_main(n_runs=args.runs)))
+    if want is None or "roof" in want:
+        from benchmarks.roofline import main as roof_main
+        sections.append(("roof", roof_main))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in sections:
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name}_FAILED,0,see stderr", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Pytree checkpointing: npz payload + msgpack-free structure encoding.
+
+Leaves are saved flat by tree path; restore maps them back onto a
+template pytree (shape/dtype checked). Works for TrainState, params and
+serving caches alike.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            arr = np.asarray(leaf, dtype=np.float32)   # npz-safe upcast
+        out[key] = arr
+    return out
+
+
+def save_pytree(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path if path.endswith(".npz") else path + ".npz",
+             **_flatten_with_names(tree))
+
+
+def restore_pytree(path: str, template):
+    """Restore into the structure of `template` (shape/dtype validated)."""
+    fname = path if path.endswith(".npz") else path + ".npz"
+    data = np.load(fname)
+    named = _flatten_with_names(template)
+    missing = [k for k in named if k not in data.files]
+    if missing:
+        raise KeyError(f"checkpoint missing {len(missing)} leaves, "
+                       f"e.g. {missing[:3]}")
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    flat = jax.tree_util.tree_flatten_with_path(template)[0]
+    new_leaves = []
+    for (pth, leaf), _ in zip(flat, leaves):
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in pth)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

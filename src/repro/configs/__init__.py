@@ -1,0 +1,4 @@
+"""Architecture configs (assigned pool + the paper's own experiment config)."""
+from repro.configs.registry import ASSIGNED, get_config, list_archs, smoke
+
+__all__ = ["ASSIGNED", "get_config", "list_archs", "smoke"]

@@ -1,0 +1,58 @@
+"""Core DSML library: the paper's contribution as composable JAX modules."""
+from repro.core.dirty import dirty_model
+from repro.core.dsml import DsmlResult, dsml_fit, dsml_fit_sharded
+from repro.core.debias import coherence, debias_lasso, inverse_hessian_m
+from repro.core.logistic import (
+    debias_logistic,
+    dsml_logistic_fit,
+    group_logistic_lasso,
+    icap_logistic,
+    logistic_lasso,
+    refit_logistic_masked,
+)
+from repro.core.metrics import (
+    classification_error,
+    estimation_error,
+    hamming,
+    prediction_error,
+    support_of,
+)
+from repro.core.prox import (
+    group_hard_threshold,
+    group_soft_threshold,
+    project_l1_ball,
+    prox_linf,
+    soft_threshold,
+    support_from_rows,
+)
+from repro.core.solvers import (
+    fista,
+    group_lasso,
+    icap,
+    lasso,
+    power_iteration,
+    refit_ols_masked,
+)
+from repro.core.synth import (
+    MultiTaskData,
+    ar_covariance,
+    gen_classification,
+    gen_regression,
+    sample_coefficients,
+)
+
+__all__ = [
+    "dirty_model",
+    "DsmlResult", "dsml_fit", "dsml_fit_sharded",
+    "coherence", "debias_lasso", "inverse_hessian_m",
+    "debias_logistic", "dsml_logistic_fit", "group_logistic_lasso",
+    "icap_logistic", "logistic_lasso", "refit_logistic_masked",
+    "classification_error", "estimation_error", "hamming",
+    "prediction_error", "support_of",
+    "group_hard_threshold", "group_soft_threshold", "project_l1_ball",
+    "prox_linf", "soft_threshold", "support_from_rows",
+    "fista", "group_lasso", "icap", "lasso", "power_iteration",
+    "refit_ols_masked",
+    "MultiTaskData", "ar_covariance", "gen_classification",
+    "gen_regression", "sample_coefficients",
+]

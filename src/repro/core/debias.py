@@ -1,0 +1,64 @@
+"""Debiased lasso (Javanmard-Montanari style) used by DSML step 2.
+
+The paper (Section 4) constructs M_t row-wise:
+
+    m_tj = argmin m^T Sigma_hat m   s.t.  ||Sigma_hat m - e_j||_inf <= mu
+
+On TPU we solve the *penalized* equivalent for all p rows simultaneously
+(one matrix FISTA on the MXU instead of p constrained QPs):
+
+    M = argmin_M  (1/2) tr(M Sigma_hat M^T) - tr(M) + mu ||M||_1
+
+whose KKT conditions give  ||Sigma_hat m_j - e_j||_inf <= mu  at any
+optimum with active l1 subgradient — i.e. a feasible point of the paper's
+program (see DESIGN.md §2 for the hardware-adaptation note). The identity
+fallback of Javanmard-Montanari (Sigma^-1 feasible) carries over.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prox import soft_threshold
+from repro.core.solvers import fista, power_iteration
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def inverse_hessian_m(Sigma: jnp.ndarray, mu, iters: int = 600) -> jnp.ndarray:
+    """Approximate inverse M (p x p, row j ~= m_tj) of a PSD covariance."""
+    p = Sigma.shape[0]
+    L = power_iteration(Sigma)
+    step = 1.0 / jnp.maximum(L, 1e-12)
+
+    # Columns solve  min 1/2 c^T Sigma c - c_j + mu|c|_1 ; Sigma symmetric,
+    # so M = C^T has rows m_j. Warm-start from a scaled identity.
+    C0 = jnp.eye(p, dtype=Sigma.dtype) / jnp.maximum(jnp.diag(Sigma), 1e-12)
+    grad = lambda C: Sigma @ C - jnp.eye(p, dtype=Sigma.dtype)
+    prox = lambda V, s: soft_threshold(V, s * mu)
+    C = fista(grad, prox, C0, step, iters)
+    return C.T
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def debias_lasso(
+    X: jnp.ndarray,
+    y: jnp.ndarray,
+    beta_hat: jnp.ndarray,
+    mu,
+    iters: int = 600,
+) -> jnp.ndarray:
+    """Debiased estimator (paper eq. 4): b^u = b + n^-1 M X^T (y - X b)."""
+    n = X.shape[0]
+    Sigma = (X.T @ X) / n
+    M = inverse_hessian_m(Sigma, mu, iters=iters)
+    resid = y - X @ beta_hat
+    return beta_hat + (M @ (X.T @ resid)) / n
+
+
+def coherence(Sigma: jnp.ndarray, M: jnp.ndarray) -> jnp.ndarray:
+    """Generalized coherence mu(X, M) = max_j ||Sigma m_j - e_j||_inf."""
+    p = Sigma.shape[0]
+    R = M @ Sigma - jnp.eye(p, dtype=Sigma.dtype)
+    return jnp.max(jnp.abs(R))

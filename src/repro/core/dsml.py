@@ -1,0 +1,103 @@
+"""DSML — Distributed debiased Sparse Multi-task Lasso (paper Algorithm 1).
+
+Two implementations of the same algorithm:
+
+  * `dsml_fit`          — single-host reference (vmap over tasks).
+  * `dsml_fit_sharded`  — SPMD implementation with `shard_map` over a
+    1-D "task" mesh axis. Each device plays the role of one worker
+    (or a group of workers); the ONLY communication is a single
+    `all_gather` of the debiased p-vector per worker — O(p) per device,
+    exactly the paper's one round. The master's group-hard-threshold is
+    computed replicated (identical on every device), which on a TPU mesh
+    is equivalent to (and cheaper than) master + broadcast.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.core.debias import debias_lasso
+from repro.core.prox import support_from_rows
+from repro.core.solvers import lasso, refit_ols_masked
+
+
+class DsmlResult(NamedTuple):
+    beta_tilde: jnp.ndarray   # (m, p) final filtered estimates
+    beta_u: jnp.ndarray       # (m, p) debiased estimates (communicated)
+    support: jnp.ndarray      # (p,) bool, \hat S(Lambda)
+    beta_local: jnp.ndarray   # (m, p) local lasso estimates (step 1)
+
+
+def _local_work(X, y, lam, mu, lasso_iters, debias_iters):
+    """Steps 1-2 of Algorithm 1: local lasso + debiasing. No communication."""
+    beta_hat = lasso(X, y, lam, iters=lasso_iters)
+    beta_u = debias_lasso(X, y, beta_hat, mu, iters=debias_iters)
+    return beta_hat, beta_u
+
+
+@partial(jax.jit, static_argnames=("lasso_iters", "debias_iters", "refit"))
+def dsml_fit(
+    Xs: jnp.ndarray,
+    ys: jnp.ndarray,
+    lam,
+    mu,
+    Lam,
+    lasso_iters: int = 400,
+    debias_iters: int = 600,
+    refit: bool = False,
+) -> DsmlResult:
+    """Single-host reference. Xs: (m, n, p), ys: (m, n)."""
+    beta_hat, beta_u = jax.vmap(
+        lambda X, y: _local_work(X, y, lam, mu, lasso_iters, debias_iters)
+    )(Xs, ys)
+    support = support_from_rows(beta_u.T, Lam)            # master: eq. (5)
+    if refit:
+        beta_tilde = jax.vmap(lambda X, y: refit_ols_masked(X, y, support))(Xs, ys)
+    else:
+        beta_tilde = beta_u * support[None, :]            # workers: eq. (6)
+    return DsmlResult(beta_tilde, beta_u, support, beta_hat)
+
+
+def dsml_fit_sharded(
+    Xs: jnp.ndarray,
+    ys: jnp.ndarray,
+    lam,
+    mu,
+    Lam,
+    mesh: Mesh,
+    axis: str = "task",
+    lasso_iters: int = 400,
+    debias_iters: int = 600,
+) -> DsmlResult:
+    """SPMD DSML over `mesh[axis]` devices. Xs: (m, n, p) sharded on axis 0.
+
+    Communication: exactly one `all_gather` of (m_local, p) debiased
+    estimates per device — O(p) numbers per worker, the paper's budget.
+    """
+
+    def worker(X_blk, y_blk):
+        # X_blk: (m_local, n, p) — the tasks owned by this device.
+        beta_hat, beta_u = jax.vmap(
+            lambda X, y: _local_work(X, y, lam, mu, lasso_iters, debias_iters)
+        )(X_blk, y_blk)
+        # ---- the ONE communication round of Algorithm 1 ----
+        B_all = jax.lax.all_gather(beta_u, axis, tiled=True)   # (m, p) everywhere
+        # ---- master step, replicated (== master + broadcast) ----
+        support = support_from_rows(B_all.T, Lam)
+        beta_tilde = beta_u * support[None, :]
+        return beta_tilde, beta_u, support, beta_hat
+
+    fn = shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=(P(axis), P(axis), P(), P(axis)),
+        check_vma=False,
+    )
+    beta_tilde, beta_u, support, beta_hat = jax.jit(fn)(Xs, ys)
+    return DsmlResult(beta_tilde, beta_u, support, beta_hat)

@@ -1,0 +1,33 @@
+"""Evaluation metrics used in the paper's experiments (Figures 1-3)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def support_of(B: jnp.ndarray, tol: float = 1e-6) -> jnp.ndarray:
+    """Estimated support from a (p, m) coefficient matrix (row-wise)."""
+    return jnp.linalg.norm(B, axis=-1) > tol
+
+
+def hamming(support_hat: jnp.ndarray, support_true: jnp.ndarray) -> jnp.ndarray:
+    """Hamming distance between supports (# of disagreeing variables)."""
+    return jnp.sum(support_hat != support_true)
+
+
+def estimation_error(B_hat: jnp.ndarray, B_true: jnp.ndarray) -> jnp.ndarray:
+    """l1/l2 error sum_j ||Bhat_j - B_j||_2 (paper Corollary 2). (p, m) args."""
+    return jnp.sum(jnp.linalg.norm(B_hat - B_true, axis=-1))
+
+
+def prediction_error(B_hat: jnp.ndarray, B_true: jnp.ndarray,
+                     Sigma: jnp.ndarray) -> jnp.ndarray:
+    """Population prediction risk (1/m) sum_t (b_t - b*_t)' Sigma (b_t - b*_t)."""
+    D = B_hat - B_true                       # (p, m)
+    return jnp.mean(jnp.einsum("pt,pq,qt->t", D, Sigma, D))
+
+
+def classification_error(B_hat: jnp.ndarray, Xs: jnp.ndarray,
+                         ys: jnp.ndarray) -> jnp.ndarray:
+    """Average 0/1 error on held-out data. Xs: (m,n,p), ys: (m,n) in {-1,1}."""
+    logits = jnp.einsum("tnp,pt->tn", Xs, B_hat)
+    return jnp.mean(jnp.sign(logits) != ys)

@@ -1,0 +1,63 @@
+"""Proximal operators used by the DSML solvers.
+
+All operators are pure jnp functions, jit- and vmap-safe, and operate on
+arbitrary leading batch dimensions unless noted.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def soft_threshold(v: jnp.ndarray, tau) -> jnp.ndarray:
+    """Elementwise soft-thresholding: prox of tau*||.||_1."""
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - tau, 0.0)
+
+
+def group_soft_threshold(B: jnp.ndarray, tau) -> jnp.ndarray:
+    """Row-wise group soft threshold: prox of tau * sum_j ||B_j||_2.
+
+    B: (p, m) matrix whose rows are groups (variable j across tasks).
+    """
+    norms = jnp.linalg.norm(B, axis=-1, keepdims=True)
+    scale = jnp.maximum(1.0 - tau / jnp.maximum(norms, 1e-30), 0.0)
+    return B * scale
+
+
+def group_hard_threshold(B: jnp.ndarray, Lam) -> jnp.ndarray:
+    """Row-wise hard threshold (paper eq. (5)-(6)). B: (p, m)."""
+    keep = jnp.linalg.norm(B, axis=-1, keepdims=True) > Lam
+    return B * keep
+
+
+def support_from_rows(B: jnp.ndarray, Lam) -> jnp.ndarray:
+    """\\hat S(Lambda) = { j : ||B_j||_2 > Lambda }. B: (p, m) -> (p,) bool."""
+    return jnp.linalg.norm(B, axis=-1) > Lam
+
+
+def project_l1_ball(v: jnp.ndarray, radius) -> jnp.ndarray:
+    """Euclidean projection of a vector v onto the l1 ball of given radius.
+
+    Duchi et al. (2008) sort-based algorithm, jit-safe (no data-dependent
+    shapes). v: (..., d) applied along the last axis.
+    """
+    radius = jnp.asarray(radius, v.dtype)
+    abs_v = jnp.abs(v)
+    inside = jnp.sum(abs_v, axis=-1, keepdims=True) <= radius
+    u = jnp.sort(abs_v, axis=-1)[..., ::-1]
+    cssv = jnp.cumsum(u, axis=-1) - radius
+    ar = jnp.arange(1, v.shape[-1] + 1, dtype=v.dtype)
+    cond = u - cssv / ar > 0
+    rho = jnp.sum(cond, axis=-1, keepdims=True)  # >= 1 when outside ball
+    rho = jnp.maximum(rho, 1)
+    theta = jnp.take_along_axis(cssv, rho - 1, axis=-1) / rho.astype(v.dtype)
+    theta = jnp.maximum(theta, 0.0)
+    proj = jnp.sign(v) * jnp.maximum(abs_v - theta, 0.0)
+    return jnp.where(inside, v, proj)
+
+
+def prox_linf(v: jnp.ndarray, tau) -> jnp.ndarray:
+    """Prox of tau*||.||_inf along the last axis (used by iCAP rows).
+
+    Moreau decomposition: prox_{tau*||.||_inf}(v) = v - P_{tau*B_1}(v).
+    """
+    return v - project_l1_ball(v, tau)

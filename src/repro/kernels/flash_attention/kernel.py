@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: causal flash attention forward (serving path).
+
+Grid: (batch*heads, q_tiles, kv_tiles) — kv is the innermost (sequential)
+dimension; the online-softmax state (m, l) and the f32 output accumulator
+live in VMEM scratch and persist across kv steps. Each step does one
+(BQ, H) x (H, BK) score matmul and one (BQ, BK) x (BK, H) value matmul on
+the MXU; masking and the rescale are VPU ops. Causality additionally
+skips whole kv tiles above the diagonal with @pl.when (the classic
+triangle-skipping schedule).
+
+Layout: q (BH, S, H), k/v (BH, T, H) — heads pre-broadcast for GQA by the
+ops.py wrapper (kv head replication happens at gather cost in VMEM, not
+HBM, on real TPU thanks to the BlockSpec index_map reuse).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, nk: int, causal: bool, window: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = kj * bk
+
+    # tile-level causal skip: no key in this tile can be visible
+    run = (k_start <= q_start + bq - 1) if causal else (kj >= 0)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0]                                  # (bq, h)
+        k = k_ref[0]                                  # (bk, h)
+        v = v_ref[0]
+        h = q.shape[-1]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) / jnp.sqrt(h).astype(jnp.float32)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        # mask multiply guards fully-masked tiles (exp(-inf - -inf) == 1)
+        p = jnp.exp(s - m_new) * mask
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(kj == nk - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0] = (acc_ref[...] / l).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           bq: int = 256, bk: int = 256,
+                           interpret: bool = False):
+    """q: (BH, S, H), k/v: (BH, T, H) -> (BH, S, H)."""
+    BH, S, H = q.shape
+    T = k.shape[1]
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
+    nq, nk = S // bq, T // bk
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+                          window=window),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, H), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, H), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, H), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, H), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, H), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # m
+            pltpu.VMEM((bq, 1), jnp.float32),   # l
+            pltpu.VMEM((bq, H), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,33 @@
+"""Jit'd wrapper: standard (B, S, N, H) layout -> Pallas flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                       bq: int = 256, bk: int = 256,
+                       interpret: bool | None = None):
+    """q: (B, S, N, H); k/v: (B, T, K, H) with N % K == 0 -> (B, S, N, H)."""
+    B, S, N, H = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = N // K
+    interp = (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * N, S, H)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * N, T, H)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * N, T, H)
+
+    bq_ = bq
+    while S % bq_:
+        bq_ //= 2
+    bk_ = bk
+    while T % bk_:
+        bk_ //= 2
+
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                                 bq=bq_, bk=bk_, interpret=interp)
+    return out.reshape(B, N, S, H).transpose(0, 2, 1, 3)

@@ -1,0 +1,16 @@
+"""Oracle for the Pallas flash-attention kernel: the pure-jnp blockwise
+implementation in repro.models.attention_core (itself validated against
+dense softmax attention in tests/test_attention_core.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention_core import flash_attention as _flash_jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, S, N, H); k/v: (B, T, K, H) -> (B, S, N, H)."""
+    S, T = q.shape[1], k.shape[1]
+    return _flash_jnp(q, k, v,
+                      q_pos=jnp.arange(S), k_pos=jnp.arange(T),
+                      causal=causal, window=window)

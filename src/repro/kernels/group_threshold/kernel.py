@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: row-wise group hard threshold.
+
+The (p, m) matrix is tiled (BP, m) — m (tasks) is small, so whole rows
+sit in VMEM and each grid step reduces its rows' squared norms on the
+VPU, compares against Lambda^2 (avoiding the sqrt), and writes both the
+masked rows and the int8 support indicator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gt_kernel(lam_ref, b_ref, out_ref, keep_ref):
+    b = b_ref[...].astype(jnp.float32)
+    sq = jnp.sum(b * b, axis=1, keepdims=True)        # (bp, 1)
+    lam2 = lam_ref[0] * lam_ref[0]
+    keep = sq > lam2
+    out_ref[...] = jnp.where(keep, b, 0.0).astype(out_ref.dtype)
+    keep_ref[...] = keep.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "interpret"))
+def group_threshold_pallas(B, Lam, *, bp: int = 256, interpret: bool = False):
+    """B: (p, m). Returns (filtered (p, m), keep (p, 1) int8)."""
+    p, m = B.shape
+    bp = min(bp, p)
+    assert p % bp == 0, (p, bp)
+    lam_arr = jnp.full((1,), Lam, jnp.float32)
+    return pl.pallas_call(
+        _gt_kernel,
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bp, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bp, m), lambda i: (i, 0)),
+            pl.BlockSpec((bp, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, m), B.dtype),
+            jax.ShapeDtypeStruct((p, 1), jnp.int8),
+        ],
+        interpret=interpret,
+    )(lam_arr, B)

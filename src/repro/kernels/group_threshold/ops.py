@@ -1,0 +1,23 @@
+"""Jit'd wrapper for the group-threshold kernel (master step of DSML)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.group_threshold.kernel import group_threshold_pallas
+from repro.kernels.group_threshold.ref import group_threshold_ref
+
+
+def group_threshold(B, Lam, *, interpret: bool | None = None):
+    """B: (p, m) -> (filtered (p, m), keep (p,) bool)."""
+    p, m = B.shape
+    interp = (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+    if p % 8:
+        out, keep = group_threshold_ref(B, Lam)
+        return out, keep
+    bp = 256
+    while p % bp:
+        bp //= 2
+    out, keep = group_threshold_pallas(B, Lam, bp=bp, interpret=interp)
+    return out, keep[:, 0].astype(bool)

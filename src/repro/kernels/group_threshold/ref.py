@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for group hard thresholding (paper eq. (5)-(6)).
+
+B: (p, m) stacked debiased estimates (variables x tasks). Returns the
+filtered matrix and the support indicator:
+    keep_j = ||B_j||_2 > Lambda ;  out_j = B_j * keep_j
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def group_threshold_ref(B: jnp.ndarray, Lam) -> tuple[jnp.ndarray, jnp.ndarray]:
+    norms = jnp.sqrt(jnp.sum(B.astype(jnp.float32) ** 2, axis=-1))
+    keep = norms > Lam
+    return (B * keep[:, None].astype(B.dtype)), keep

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused ISTA step (matmul + gradient step + prox).
+
+Tiling: the output (p, r) is tiled (BP, BR); the contraction over p runs
+as the innermost grid dimension with a VMEM f32 scratch accumulator —
+each (i, j) output tile accumulates Sigma[i, :] @ beta[:, j] over k-tiles
+on the MXU, then the epilogue (gradient step + soft threshold, VPU ops)
+fires on the last k step. Tiles default to 128 (MXU-aligned); the scalars
+(eta, lam) ride in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ista_kernel(eta_lam_ref, sig_ref, beta_ref, beta_tile_ref, c_ref,
+                 out_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(sig_ref[...], beta_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        eta = eta_lam_ref[0]
+        lam = eta_lam_ref[1]
+        grad = acc_ref[...] - c_ref[...].astype(jnp.float32)
+        z = beta_tile_ref[...].astype(jnp.float32) - eta * grad
+        tau = eta * lam
+        out = jnp.sign(z) * jnp.maximum(jnp.abs(z) - tau, 0.0)
+        out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bp", "br", "bk", "interpret"))
+def ista_step_pallas(Sigma, beta, c, eta, lam, *, bp: int = 128,
+                     br: int = 128, bk: int = 128,
+                     interpret: bool = False):
+    """Sigma: (p, p), beta/c: (p, r). Returns the next ISTA iterate (p, r)."""
+    p, r = beta.shape
+    bp = min(bp, p)
+    br = min(br, r)
+    bk = min(bk, p)
+    assert p % bp == 0 and r % br == 0 and p % bk == 0, (p, r, bp, br, bk)
+    ni, nj, nk = p // bp, r // br, p // bk
+
+    eta_lam = jnp.array([eta, lam], jnp.float32)
+
+    return pl.pallas_call(
+        functools.partial(_ista_kernel, nk=nk),
+        grid=(ni, nj, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # (eta, lam)
+            pl.BlockSpec((bp, bk), lambda i, j, k: (i, k)),   # Sigma tile
+            pl.BlockSpec((bk, br), lambda i, j, k: (k, j)),   # beta (contraction)
+            pl.BlockSpec((bp, br), lambda i, j, k: (i, j)),   # beta (iterate)
+            pl.BlockSpec((bp, br), lambda i, j, k: (i, j)),   # c tile
+        ],
+        out_specs=pl.BlockSpec((bp, br), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, r), beta.dtype),
+        scratch_shapes=[pltpu.VMEM((bp, br), jnp.float32)],
+        interpret=interpret,
+    )(eta_lam, Sigma, beta, beta, c)

@@ -1,0 +1,60 @@
+"""Jit'd public wrapper for the fused ISTA step.
+
+On CPU (this container) the kernel body executes in interpret mode; on a
+real TPU the same BlockSpecs compile to Mosaic. `ista_solve` runs a whole
+FISTA-free proximal-gradient loop with the fused kernel as the body —
+the drop-in accelerated path for core/solvers.lasso and
+core/debias.inverse_hessian_m.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ista_step.kernel import ista_step_pallas
+from repro.kernels.ista_step.ref import ista_step_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ista_step(Sigma, beta, c, eta, lam, *, block: int = 128,
+              interpret: bool | None = None):
+    """One fused ISTA step. Shapes: Sigma (p,p); beta, c (p,) or (p,r)."""
+    squeeze = beta.ndim == 1
+    if squeeze:
+        beta = beta[:, None]
+        c = c[:, None]
+    p, r = beta.shape
+    interp = (not _on_tpu()) if interpret is None else interpret
+    if p % 8 or (r % 8 and r != 1):
+        out = ista_step_ref(Sigma, beta, c, eta, lam)   # ragged fallback
+    else:
+        bp = min(block, p)
+        br = min(block, r)
+        while p % bp:
+            bp //= 2
+        while r % br:
+            br //= 2
+        out = ista_step_pallas(Sigma, beta, c, eta, lam, bp=bp, br=br,
+                               bk=bp, interpret=interp)
+    return out[:, 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "block", "interpret"))
+def ista_solve(Sigma, c, lam, *, iters: int = 400, block: int = 128,
+               interpret: bool | None = None):
+    """Proximal-gradient lasso solve on sufficient statistics via the
+    fused kernel: min_b 1/2 b'Sigma b - c'b + lam|b|_1 (multi-RHS)."""
+    from repro.core.solvers import power_iteration
+    eta = 1.0 / jnp.maximum(power_iteration(Sigma), 1e-12)
+    beta0 = jnp.zeros_like(c)
+
+    def body(_, beta):
+        return ista_step(Sigma, beta, c, eta, lam, block=block,
+                         interpret=interpret)
+
+    return jax.lax.fori_loop(0, iters, body, beta0)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused ISTA step.
+
+One proximal-gradient iteration of the lasso on precomputed sufficient
+statistics (the hot loop of DSML's local solve and of the M-matrix
+estimation — see core/solvers.py):
+
+    beta' = soft_threshold(beta - eta * (Sigma @ beta - c), eta * lam)
+
+Sigma: (p, p), beta/c: (p, n_rhs) — the multi-RHS form covers both the
+lasso (n_rhs=1) and the debias M-matrix (n_rhs=p) solves.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ista_step_ref(Sigma: jnp.ndarray, beta: jnp.ndarray, c: jnp.ndarray,
+                  eta: float, lam: float) -> jnp.ndarray:
+    grad = Sigma @ beta - c
+    z = beta - eta * grad
+    tau = eta * lam
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - tau, 0.0)

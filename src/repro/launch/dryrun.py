@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init). Everything below is ordinary code.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ASSIGNED  # noqa: E402
+from repro.launch.hlo import analyze_hlo, roofline  # noqa: E402
+from repro.launch.mesh import HW, make_production_mesh  # noqa: E402
+from repro.launch.specs import SHAPES, input_specs  # noqa: E402
+from repro.models import stack_plan  # noqa: E402
+from repro.serving.engine import make_prefill_step, make_serve_step  # noqa: E402
+from repro.sharding.rules import (  # noqa: E402
+    batch_pspecs, cache_pspecs, logits_pspec, named, opt_pspecs,
+    param_pspecs, train_state_pspecs,
+)
+from repro.training.step import make_train_step  # noqa: E402
+
+
+def lower_combo(arch: str, shape: str, *, multi_pod: bool,
+                mesh_override: tuple | None = None):
+    """Lower + compile one (arch x shape x mesh) combo; returns a record.
+
+    mesh_override: (data, model) single-pod shape for §Perf experiments
+    (e.g. (32, 8) gives minitron's 24 heads a dividing TP degree)."""
+    spec = input_specs(arch, shape)
+    mesh_name = ("x".join(map(str, mesh_override)) if mesh_override
+                 else ("2x16x16" if multi_pod else "16x16"))
+    if spec is None:
+        return {"arch": arch, "shape": shape, "mesh": mesh_name,
+                "status": "skipped",
+                "note": "long_500k out of regime for enc-dec (DESIGN.md §7)"}
+    cfg, mode = spec.cfg, spec.mode
+    info = SHAPES[shape]
+    if mesh_override:
+        mesh = jax.make_mesh(tuple(mesh_override), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    B, S = info["batch"], info["seq"]
+    micro = 0
+
+    if mode == "train":
+        state, batch = spec.args
+        lp = NamedSharding(mesh, logits_pspec(mesh, cfg.padded_vocab,
+                                              batch.tokens.shape[1]))
+        # auto gradient-accumulation: keep the remat-saved residual stream
+        # (L x B_local x S x d, bf16) under ~4 GB/chip
+        dp = (mesh.shape.get("pod", 1)) * mesh.shape["data"]
+        resid = (cfg.n_layers * (B // dp) * batch.tokens.shape[1]
+                 * cfg.d_model * 2)
+        micro = 1
+        while micro < 16 and resid / micro > 4e9 and (B // dp) % (2 * micro) == 0:
+            micro *= 2
+        micro = max(micro, 4) if (B // dp) % 4 == 0 else micro
+        fn = make_train_step(
+            cfg, logits_pspec=lp, microbatches=micro,
+            grads_pspec=named(mesh, opt_pspecs(state.params, mesh)))
+        in_sh = (named(mesh, train_state_pspecs(state, mesh)),
+                 named(mesh, batch_pspecs(mesh, B, cfg.frontend is not None)))
+        jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=(0,))
+        args = (state, batch)
+        if cfg.moe is not None and os.environ.get("MOE_SHARDING", "1") == "1":
+            from repro.models.moe import moe_sharding
+            from repro.sharding.rules import dp_axes
+            eb = (NamedSharding(mesh, P("model", None, None))
+                  if os.environ.get("MOE_EXPERT_BATCH", "1") == "1" else None)
+            ctx = moe_sharding(
+                expert_batch=eb,
+                tokens=NamedSharding(mesh, P(dp_axes(mesh), None)))
+        else:
+            import contextlib
+            ctx = contextlib.nullcontext()
+        import contextlib as _cl
+        globals()["_moe_ctx"] = ctx
+    elif mode == "prefill":
+        params, batch = spec.args
+        fn = make_prefill_step(cfg, cache_len=S)
+        bspec = batch_pspecs(mesh, B, cfg.frontend is not None)
+        in_sh = (named(mesh, param_pspecs(params, mesh)),
+                 named(mesh, Batch_like(bspec, batch)))
+        jitted = jax.jit(fn, in_shardings=in_sh)
+        args = (params, batch)
+    else:  # decode
+        params, token, pos, caches = spec.args
+        fn = make_serve_step(cfg)
+        tok_spec = batch_pspecs(mesh, B).tokens
+        in_sh = (named(mesh, param_pspecs(params, mesh)),
+                 NamedSharding(mesh, tok_spec),
+                 NamedSharding(mesh, P()),
+                 named(mesh, cache_pspecs(mesh, caches, B)))
+        jitted = jax.jit(fn, in_shardings=in_sh)
+        args = (params, token, pos, caches)
+
+    import contextlib
+    ctx = globals().get("_moe_ctx") or contextlib.nullcontext()
+    t0 = time.time()
+    with ctx:
+        lowered = jitted.lower(*args)
+    globals()["_moe_ctx"] = None
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+    ma = compiled.memory_analysis()
+    mem = {}
+    if ma is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes"):
+            mem[f] = getattr(ma, f, 0)
+
+    pat, n_groups, tail = stack_plan(cfg)
+    hlo = compiled.as_text()
+    ana = analyze_hlo(hlo, default_trip=n_groups)
+    coll = ana["collectives"]
+    # analytic (trip-aware) flops; cost_analysis counts loop bodies once.
+    flops_analytic = ana["flops"]
+    # memory: XLA's bytes-accessed is fusion-aware but loop-once; scale it
+    # by the loop multiplier inferred from the flops ratio (the estimator
+    # used for every recorded artifact — keeps before/after comparable).
+    # The traffic-weighted alternative and the raw per-instruction operand
+    # sum are recorded alongside as upper bounds.
+    loop_mult = max(1.0, flops_analytic / max(flops, 1.0))
+    bytes_scaled = bytes_acc * loop_mult
+    bytes_traffic_weighted = bytes_acc * max(1.0, ana.get("traffic_eff_mult", 1.0))
+    terms = roofline(flops_analytic, bytes_scaled, coll.get("total", 0.0))
+
+    # MODEL_FLOPS (useful-compute reference)
+    n_active = cfg.active_param_count()
+    tokens = {"train": B * S, "prefill": B * S, "decode": B}[mode]
+    factor = 6 if mode == "train" else 2
+    chips = 512 if multi_pod else 256
+    model_flops = factor * n_active * tokens
+    ratio = model_flops / max(flops_analytic * chips, 1.0)
+
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": mesh_name,
+        "status": "ok", "mode": mode, "note": spec.note,
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "flops_per_chip": flops_analytic, "bytes_per_chip": bytes_scaled,
+        "bytes_upper_bound": ana["bytes"],
+        "bytes_traffic_weighted": bytes_traffic_weighted,
+        "flops_per_chip_xla": flops, "bytes_per_chip_xla": bytes_acc,
+        "collective_bytes_per_chip": coll, "memory": mem,
+        "roofline": terms,
+        "model_flops": model_flops, "useful_ratio": ratio,
+        "n_params": cfg.param_count(), "n_active": n_active,
+        "microbatches": micro, "hlo_bytes": len(hlo),
+    }
+    return rec
+
+
+def Batch_like(bspec, batch):
+    """Match the Batch pspec tree to a Batch that may have None members."""
+    from repro.models import Batch
+    return Batch(tokens=bspec.tokens,
+                 labels=bspec.labels if batch.labels is not None else None,
+                 frontend=bspec.frontend if batch.frontend is not None else None)
+
+
+def main():
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="DxM single-pod override, e.g. 32x8 (perf exps)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    mesh_override = (tuple(int(x) for x in args.mesh.split("x"))
+                     if args.mesh else None)
+
+    archs = ASSIGNED if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = args.mesh if mesh_override else (
+                    "2x16x16" if mp else "16x16")
+                tag = f"{arch}__{shape}__{mesh_name}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = lower_combo(arch, shape, multi_pod=mp,
+                                      mesh_override=mesh_override)
+                except Exception as e:  # record failures as bugs to fix
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+                status = rec["status"]
+                rf = rec.get("roofline", {})
+                print(f"  -> {status} compile={rec.get('t_compile_s', '-')}s "
+                      f"bottleneck={rf.get('bottleneck', '-')}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

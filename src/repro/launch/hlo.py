@@ -1,0 +1,335 @@
+"""Post-SPMD HLO analysis: collective-byte accounting with while-loop
+trip-count awareness (scan bodies execute `trip` times but appear once in
+the module text), plus the three-term roofline derivation.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+from repro.launch.mesh import HW
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# all-reduce moves ~2x the buffer (reduce-scatter + all-gather phases)
+_MULT = {"all-reduce": 2.0}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every dtype[shape] group in an instruction's output."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_computations(hlo: str):
+    """Split module text into {computation-name: lines}, plus the entry name."""
+    comps: Dict[str, list] = {}
+    current = None
+    entry = None
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            current = m.group(2)
+            if m.group(1):
+                entry = current
+            comps[current] = []
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(line)
+    return comps, entry
+
+
+def collective_bytes(hlo: str, default_trip: int = 1) -> dict:
+    """Per-device collective bytes, scaled by while-loop trip counts.
+
+    Trip counts are recovered from the loop-condition computation's
+    comparison constant; when that fails, `default_trip` is used for
+    while bodies (pass the model's scan length).
+    """
+    comps, entry = parse_computations(hlo)
+
+    # computation -> (body, cond) pairs of while instructions inside it
+    while_edges = defaultdict(list)
+    call_edges = defaultdict(list)
+    for cname, lines in comps.items():
+        for ln in lines:
+            if _WHILE_RE.search(ln):
+                body = _BODY_RE.search(ln)
+                cond = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if body:
+                    while_edges[cname].append(
+                        (body.group(1), cond.group(1) if cond else None))
+            else:
+                for callee in _CALL_RE.findall(ln):
+                    call_edges[cname].append(callee)
+
+    def trip_count(cond_name) -> int:
+        if cond_name and cond_name in comps:
+            consts = [int(c) for ln in comps[cond_name]
+                      for c in _CONST_RE.findall(ln)]
+            big = [c for c in consts if c > 1]
+            if big:
+                return max(big)
+        return default_trip
+
+    # propagate multipliers from the entry computation
+    if entry is None:
+        for cname in comps:
+            if "main" in cname:
+                entry = cname
+                break
+    if entry is None and comps:
+        entry = next(iter(comps))
+    if entry is None:
+        return {"total": 0.0}
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    stack = [entry]
+    seen = set()
+    while stack:
+        c = stack.pop()
+        if c in seen:
+            continue
+        seen.add(c)
+        for body, cond in while_edges.get(c, ()):
+            mult[body] = max(mult[body], mult[c] * trip_count(cond))
+            stack.append(body)
+        for callee in call_edges.get(c, ()):
+            if callee in comps:
+                mult[callee] = max(mult[callee], mult[c])
+                stack.append(callee)
+
+    per_kind = defaultdict(float)
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1.0)
+        for ln in lines:
+            for kind in _COLLECTIVES:
+                if re.search(rf"\b{kind}(-start)?\(", ln):
+                    lhs = ln.split(" = ")[0] + " = " + \
+                        ln.split(" = ")[1].split(kind)[0] if " = " in ln else ln
+                    per_kind[kind] += _shape_bytes(lhs) * m * _MULT.get(kind, 1.0)
+                    break
+    per_kind["total"] = sum(v for k, v in per_kind.items() if k != "total")
+    return dict(per_kind)
+
+
+_DOT_RE = re.compile(
+    r"%?([\w\.\-]+) = (\w+)\[([\d,]*)\][^=]*dot\(%?([\w\.\-]+),")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+) = (\w+)\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _dims(text: str):
+    return [int(d) for d in text.split(",") if d]
+
+
+def analyze_hlo(hlo: str, default_trip: int = 1) -> dict:
+    """Trip-count-aware analytic accounting over the post-SPMD module:
+
+      flops — 2*M*N*K of every dot, scaled by the executing computation's
+              while-loop multiplier (XLA's cost_analysis counts loop
+              bodies ONCE, badly undercounting scanned stacks);
+      bytes — operand reads + output writes of top-level instructions
+              (entry + loop bodies), i.e. fusion-boundary HBM traffic;
+      collectives — per-kind bytes (all-reduce counted 2x).
+
+    Returns {"flops", "bytes", "collectives": {...}}.
+    """
+    comps, entry = parse_computations(hlo)
+    mults = _computation_multipliers(comps, entry, default_trip)
+
+    # name -> (dtype, dims) map for every instruction definition
+    shapes = {}
+    for lines in comps.values():
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if m:
+                shapes[m.group(1)] = (m.group(2), _dims(m.group(3)))
+
+    def nbytes(name):
+        dt, dims = shapes.get(name, ("", []))
+        b = _DTYPE_BYTES.get(dt, 0)
+        n = 1
+        for d in dims:
+            n *= d
+        return n * b if dims or dt in _DTYPE_BYTES else 0
+
+    # classify computations: traffic is counted only at the top level of
+    # the entry and while bodies/conds; fusion-internal comps are skipped.
+    traffic_comps = {entry} if entry else set()
+    for lines in comps.values():
+        for ln in lines:
+            if _WHILE_RE.search(ln):
+                b = _BODY_RE.search(ln)
+                c = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if b:
+                    traffic_comps.add(b.group(1))
+                if c:
+                    traffic_comps.add(c.group(1))
+
+    flops = 0.0
+    traffic = 0.0
+    traffic_once = 0.0          # per-computation, unscaled (for eff mult)
+    traffic_once_scaled = 0.0
+    for cname, lines in comps.items():
+        mult = mults.get(cname, 1.0)
+        count_traffic = cname in traffic_comps
+        for ln in lines:
+            dm = _DOT_RE.search(ln)
+            if dm:
+                out_elems = 1
+                for d in _dims(dm.group(3)):
+                    out_elems *= d
+                lhs_dt, lhs_dims = shapes.get(dm.group(4), ("", []))
+                k = 1
+                cm = _LHS_CONTRACT_RE.search(ln)
+                if cm and lhs_dims:
+                    for ci in _dims(cm.group(1)):
+                        if ci < len(lhs_dims):
+                            k *= lhs_dims[ci]
+                flops += 2.0 * out_elems * k * mult
+            if count_traffic:
+                m = _DEF_RE.match(ln)
+                if not m:
+                    continue
+                # skip zero-cost / separately-accounted instructions
+                if re.search(r"= \S+ (parameter|constant|get-tuple-element|"
+                             r"tuple|bitcast|while|conditional|all-gather|"
+                             r"all-reduce|reduce-scatter|all-to-all|"
+                             r"collective-permute|partition-id|after-all|"
+                             r"iota)\(", ln.replace("{", " ").replace("]", "] ")) \
+                        or re.search(r"\b(parameter|get-tuple-element|tuple|"
+                                     r"while|all-gather|all-reduce|"
+                                     r"reduce-scatter|all-to-all|"
+                                     r"collective-permute)\(", ln):
+                    continue
+                if "dynamic-update-slice(" in ln:
+                    # in-place: read+write only the updated slice (operand 1)
+                    ops = _OPERAND_RE.findall(ln.split("(", 1)[1])
+                    upd = ops[1] if len(ops) > 1 else None
+                    traffic += 2 * nbytes(upd) * mult if upd else 0
+                    continue
+                w = nbytes(m.group(1))
+                r = sum(nbytes(op) for op in _OPERAND_RE.findall(
+                    ln.split("(", 1)[1]) if op in shapes) if "(" in ln else 0
+                if "dynamic-slice(" in ln:
+                    r = w                      # reads only the slice
+                traffic += (w + r) * mult
+                traffic_once += (w + r)
+                traffic_once_scaled += (w + r) * mult
+
+    coll = _collective_bytes_from(comps, mults)
+    # effective loop multiplier for memory traffic: XLA's bytes-accessed
+    # counts each computation once; weight its total by where the traffic
+    # actually sits (entry vs loop bodies) instead of the flops ratio,
+    # which misattributes entry-level bytes to deep loops.
+    eff_mult = (traffic_once_scaled / traffic_once) if traffic_once else 1.0
+    return {"flops": flops, "bytes": traffic, "collectives": coll,
+            "traffic_eff_mult": eff_mult}
+
+
+def _computation_multipliers(comps, entry, default_trip):
+    while_edges = defaultdict(list)
+    call_edges = defaultdict(list)
+    for cname, lines in comps.items():
+        for ln in lines:
+            if _WHILE_RE.search(ln):
+                body = _BODY_RE.search(ln)
+                cond = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if body:
+                    while_edges[cname].append(
+                        (body.group(1), cond.group(1) if cond else None))
+            else:
+                for callee in _CALL_RE.findall(ln):
+                    call_edges[cname].append(callee)
+
+    def trip_count(cond_name) -> int:
+        if cond_name and cond_name in comps:
+            consts = [int(c) for ln in comps[cond_name]
+                      for c in _CONST_RE.findall(ln)]
+            big = [c for c in consts if c > 1]
+            if big:
+                return max(big)
+        return default_trip
+
+    if entry is None:
+        for cname in comps:
+            if "main" in cname:
+                entry = cname
+                break
+    if entry is None and comps:
+        entry = next(iter(comps))
+    mult: Dict[str, float] = defaultdict(float)
+    if entry is None:
+        return mult
+    mult[entry] = 1.0
+    work = [entry]
+    visited = set()
+    while work:
+        c = work.pop()
+        if c in visited:
+            continue
+        visited.add(c)
+        for body, cond in while_edges.get(c, ()):
+            mult[body] = max(mult[body], mult[c] * trip_count(cond))
+            work.append(body)
+        for callee in call_edges.get(c, ()):
+            if callee in comps:
+                mult[callee] = max(mult[callee], mult[c])
+                work.append(callee)
+    return mult
+
+
+def _collective_bytes_from(comps, mults) -> dict:
+    per_kind = defaultdict(float)
+    for cname, lines in comps.items():
+        m = mults.get(cname, 1.0)
+        for ln in lines:
+            for kind in _COLLECTIVES:
+                if re.search(rf"\b{kind}(-start)?\(", ln):
+                    lhs = ln.split(" = ")[0] + " = " + \
+                        ln.split(" = ")[1].split(kind)[0] if " = " in ln else ln
+                    per_kind[kind] += _shape_bytes(lhs) * m * _MULT.get(kind, 1.0)
+                    break
+    per_kind["total"] = sum(v for k, v in per_kind.items() if k != "total")
+    return dict(per_kind)
+
+
+def roofline(flops: float, bytes_accessed: float, coll_bytes: float) -> dict:
+    """Three roofline terms in seconds (per-chip quantities in, see
+    DESIGN.md §8). cost_analysis reports the per-device SPMD module."""
+    t_compute = flops / HW["peak_flops_bf16"]
+    t_memory = bytes_accessed / HW["hbm_bw"]
+    t_coll = coll_bytes / HW["ici_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]
+                              if k.endswith("_s") else -1).replace("_s", "")
+    return terms

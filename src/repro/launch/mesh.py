@@ -1,0 +1,31 @@
+"""Production mesh construction (TPU v5e target; CPU placeholder devices
+for the dry-run — see dryrun.py which sets XLA_FLAGS before any import).
+
+This module NEVER touches jax device state at import time.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis.
+HW = {
+    "peak_flops_bf16": 197e12,      # FLOP/s per chip
+    "hbm_bw": 819e9,                # B/s per chip
+    "ici_bw": 50e9,                 # B/s per link
+    "hbm_bytes": 16e9,              # HBM capacity per chip
+}

@@ -1,0 +1,100 @@
+"""Abstract input specs (ShapeDtypeStructs) for every (arch x shape) combo.
+
+No device memory is allocated: parameter/optimizer/cache shapes come from
+`jax.eval_shape` over the real initializers, so the dry-run lowers the
+exact production byte-for-byte shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import Batch, init_caches
+from repro.models.config import ModelConfig
+from repro.training.step import init_train_state
+
+SHAPES = {
+    "train_4k":    dict(seq=4096,   batch=256, mode="train"),
+    "prefill_32k": dict(seq=32768,  batch=32,  mode="prefill"),
+    "decode_32k":  dict(seq=32768,  batch=128, mode="decode"),
+    "long_500k":   dict(seq=524288, batch=1,   mode="decode"),
+}
+
+# archs that natively handle 500k decode (bounded state / local window)
+_NATIVE_LONG = {"mamba2-1.3b", "recurrentgemma-9b"}
+# enc-dec: a 500k-token decoder cache is out of the model's regime (skip,
+# noted in DESIGN.md §7)
+_SKIP_LONG = {"seamless-m4t-medium"}
+_SWA_WINDOW = 4096
+
+
+class ComboSpec(NamedTuple):
+    cfg: ModelConfig
+    mode: str                       # train | prefill | decode
+    args: tuple                     # ShapeDtypeStruct pytrees
+    note: str
+
+
+def arch_for_shape(arch: str, shape: str) -> Optional[tuple]:
+    """Returns (cfg, note) with any long-context variant applied, or None
+    if the combo is skipped (recorded in DESIGN.md)."""
+    cfg = get_config(arch)
+    note = ""
+    if shape == "long_500k":
+        if arch in _SKIP_LONG:
+            return None
+        if arch not in _NATIVE_LONG:
+            cfg = cfg.replace(window=_SWA_WINDOW)
+            note = f"sliding-window variant (window={_SWA_WINDOW})"
+    return cfg, note
+
+
+def _frontend_spec(cfg: ModelConfig, batch: int):
+    if cfg.frontend is None:
+        return None
+    return jax.ShapeDtypeStruct((batch, cfg.n_frontend_tokens, cfg.d_model),
+                                jnp.float32)
+
+
+def _token_len(cfg: ModelConfig, seq: int) -> int:
+    """Text-token length so that total decoder context == seq."""
+    if cfg.arch_type == "vlm":
+        return seq - cfg.n_frontend_tokens
+    return seq
+
+
+def input_specs(arch: str, shape: str) -> Optional[ComboSpec]:
+    resolved = arch_for_shape(arch, shape)
+    if resolved is None:
+        return None
+    cfg, note = resolved
+    info = SHAPES[shape]
+    seq, batch, mode = info["seq"], info["batch"], info["mode"]
+    key = jax.random.PRNGKey(0)
+
+    if mode == "train":
+        S = _token_len(cfg, seq)
+        state = jax.eval_shape(lambda: init_train_state(key, cfg))
+        tok = jax.ShapeDtypeStruct((batch, S), jnp.int32)
+        batch_spec = Batch(tokens=tok, labels=tok,
+                           frontend=_frontend_spec(cfg, batch))
+        return ComboSpec(cfg, mode, (state, batch_spec), note)
+
+    if mode == "prefill":
+        S = _token_len(cfg, seq)
+        params = jax.eval_shape(lambda: init_train_state(key, cfg)).params
+        tok = jax.ShapeDtypeStruct((batch, S), jnp.int32)
+        batch_spec = Batch(tokens=tok, labels=None,
+                           frontend=_frontend_spec(cfg, batch))
+        return ComboSpec(cfg, mode, (params, batch_spec), note)
+
+    # decode: ONE token against a cache of `seq`
+    params = jax.eval_shape(lambda: init_train_state(key, cfg)).params
+    caches = jax.eval_shape(lambda: init_caches(cfg, batch, seq))
+    token = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return ComboSpec(cfg, mode, (params, token, pos, caches), note)

@@ -1,0 +1,88 @@
+"""Production training launcher.
+
+On real hardware this runs under the production mesh; on this container
+it runs any --arch at a --scale-reduced size on the host devices:
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-moe-30b-a3b \
+        --reduced --steps 20
+
+Full-size configs on the production mesh are exercised (lower+compile)
+by repro.launch.dryrun; this launcher shares the exact same step
+construction and sharding rules, so a dry-run pass transfers.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.checkpoint.io import restore_pytree, save_pytree
+from repro.configs import ASSIGNED, get_config, smoke
+from repro.data.synth_tokens import synthetic_lm_batches
+from repro.launch.mesh import make_host_mesh
+from repro.sharding.rules import (
+    batch_pspecs, logits_pspec, named, opt_pspecs, train_state_pspecs,
+)
+from repro.training.step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=ASSIGNED)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--resume", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = smoke(cfg)
+    mesh = make_host_mesh(model_axis=args.model_axis)
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)}")
+
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    if args.resume:
+        state = restore_pytree(args.resume, state)
+        print(f"resumed from {args.resume} at step {int(state.step)}")
+
+    lp = NamedSharding(mesh, logits_pspec(mesh, cfg.padded_vocab, args.seq))
+    step = jax.jit(
+        make_train_step(cfg, peak_lr=args.lr, warmup=20,
+                        total_steps=args.steps,
+                        microbatches=args.microbatches, logits_pspec=lp,
+                        grads_pspec=named(mesh, opt_pspecs(state.params, mesh))),
+        in_shardings=(named(mesh, train_state_pspecs(state, mesh)),
+                      named(mesh, batch_pspecs(mesh, args.batch,
+                                               cfg.frontend is not None))),
+        donate_argnums=(0,))
+
+    fe_shape = ((cfg.n_frontend_tokens, cfg.d_model)
+                if cfg.frontend else None)
+    batches = synthetic_lm_batches(jax.random.PRNGKey(1), vocab=cfg.vocab,
+                                   batch=args.batch, seq=args.seq,
+                                   frontend_shape=fe_shape)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        for i, batch in zip(range(args.steps), batches):
+            state, metrics = step(state, batch)
+            if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+                print(f"step {i:4d}  loss={float(metrics['loss']):.4f}  "
+                      f"grad={float(metrics['grad_norm']):.3f}  "
+                      f"{(time.time()-t0)/(i+1):.2f}s/step", flush=True)
+    if args.checkpoint:
+        save_pytree(args.checkpoint, state)
+        print(f"saved checkpoint to {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

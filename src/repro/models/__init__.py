@@ -1,0 +1,23 @@
+"""Backbone model zoo (see DESIGN.md §3)."""
+from repro.models.backbone import (
+    forward_features,
+    Batch,
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_caches,
+    init_params,
+    stack_plan,
+)
+from repro.models.config import (
+    ModelConfig,
+    MoeConfig,
+    RglruConfig,
+    SsdConfig,
+)
+
+__all__ = [
+    "Batch", "forward_decode", "forward_features", "forward_prefill", "forward_train",
+    "init_caches", "init_params", "stack_plan",
+    "ModelConfig", "MoeConfig", "RglruConfig", "SsdConfig",
+]

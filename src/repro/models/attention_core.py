@@ -1,0 +1,177 @@
+"""Blockwise (flash-style) attention with a custom VJP, in pure JAX.
+
+Materializing (S, T) score matrices is impossible at 32k+ context
+(hundreds of GB per layer); this module computes attention with online
+softmax over key/value blocks, O(S) memory, and a Flash-2-style backward
+that recomputes scores per block from the saved (out, lse).
+
+Layouts (GQA-grouped):
+  q: (B, K, G, S, H)   k, v: (B, K, T, H)
+Masking is positional: q_pos (S,), k_pos (T,), k_valid (T,) handle
+causality, sliding windows, ring-buffer caches and padding uniformly.
+
+This is also the pure-jnp oracle for kernels/flash_attention.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos, k_pos, k_valid, causal: bool, window: int):
+    """(S, Tb) boolean mask for one key block."""
+    m = k_valid[None, :]
+    if causal:
+        m = m & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        m = m & (k_pos[None, :] > q_pos[:, None] - window)
+    return m
+
+
+def _pad_to(x, mult, axis, value=0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def flash_attention_grouped(q, k, v, q_pos, k_pos, k_valid,
+                            causal: bool = True, window: int = 0,
+                            block: int = 1024):
+    out, _ = _flash_fwd(q, k, v, q_pos, k_pos, k_valid, causal, window, block)
+    return out
+
+
+def _flash_fwd(q, k, v, q_pos, k_pos, k_valid, causal, window, block):
+    B, K, G, S, H = q.shape
+    T = k.shape[2]
+    blk = min(block, T)
+    scale = 1.0 / jnp.sqrt(H).astype(jnp.float32)
+
+    kp = _pad_to(k, blk, 2)
+    vp = _pad_to(v, blk, 2)
+    kpos = _pad_to(k_pos, blk, 0, value=-1)
+    kval = _pad_to(k_valid, blk, 0, value=False)
+    nb = kp.shape[2] // blk
+
+    ks = kp.reshape(B, K, nb, blk, H).transpose(2, 0, 1, 3, 4)
+    vs = vp.reshape(B, K, nb, blk, H).transpose(2, 0, 1, 3, 4)
+    kps = kpos.reshape(nb, blk)
+    kvs = kval.reshape(nb, blk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_j, v_j, kp_j, kv_j = xs
+        s = jnp.einsum("bkgsh,bkth->bkgst", q, k_j).astype(jnp.float32) * scale
+        mask = _block_mask(q_pos, kp_j, kv_j, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        # mask multiply guards fully-masked rows (exp(-inf - -inf) == 1)
+        p = jnp.exp(s - m_new[..., None]) * mask[None, None, None]
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,bkth->bkgsh", p.astype(v_j.dtype), v_j)
+        acc_new = acc * alpha[..., None] + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    a0 = jnp.zeros((B, K, G, S, H), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kps, kvs))
+
+    safe_l = jnp.maximum(l, 1e-30)
+    out = (acc / safe_l[..., None]).astype(q.dtype)
+    out = jnp.where((l > 0)[..., None], out, 0)
+    lse = m + jnp.log(safe_l)
+    return out, lse
+
+
+def _flash_fwd_vjp(q, k, v, q_pos, k_pos, k_valid, causal, window, block):
+    out, lse = _flash_fwd(q, k, v, q_pos, k_pos, k_valid, causal, window, block)
+    return out, (q, k, v, q_pos, k_pos, k_valid, out, lse)
+
+
+def _flash_bwd(causal, window, block, res, dout):
+    q, k, v, q_pos, k_pos, k_valid, out, lse = res
+    B, K, G, S, H = q.shape
+    T = k.shape[2]
+    blk = min(block, T)
+    scale = 1.0 / jnp.sqrt(H).astype(jnp.float32)
+    f32 = jnp.float32
+
+    D = jnp.sum(dout.astype(f32) * out.astype(f32), axis=-1)      # (B,K,G,S)
+
+    kp = _pad_to(k, blk, 2)
+    vp = _pad_to(v, blk, 2)
+    kpos = _pad_to(k_pos, blk, 0, value=-1)
+    kval = _pad_to(k_valid, blk, 0, value=False)
+    nb = kp.shape[2] // blk
+    ks = kp.reshape(B, K, nb, blk, H).transpose(2, 0, 1, 3, 4)
+    vs = vp.reshape(B, K, nb, blk, H).transpose(2, 0, 1, 3, 4)
+    kps = kpos.reshape(nb, blk)
+    kvs = kval.reshape(nb, blk)
+
+    def block_terms(k_j, v_j, kp_j, kv_j):
+        s = jnp.einsum("bkgsh,bkth->bkgst", q, k_j).astype(f32) * scale
+        mask = _block_mask(q_pos, kp_j, kv_j, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None]) * mask[None, None, None]   # (B,K,G,S,Tb)
+        dp = jnp.einsum("bkgsh,bkth->bkgst", dout, v_j).astype(f32)
+        ds = p * (dp - D[..., None]) * scale
+        return p, ds
+
+    # dq accumulates over kv blocks
+    def dq_body(dq, xs):
+        p, ds = block_terms(*xs)
+        dq_new = dq + jnp.einsum("bkgst,bkth->bkgsh",
+                                 ds.astype(k.dtype), xs[0]).astype(f32)
+        return dq_new, None
+
+    dq0 = jnp.zeros((B, K, G, S, H), f32)
+    dq, _ = jax.lax.scan(dq_body, dq0, (ks, vs, kps, kvs))
+
+    # dk/dv per kv block (no cross-block coupling)
+    def dkv_body(_, xs):
+        k_j, v_j = xs[0], xs[1]
+        p, ds = block_terms(*xs)
+        dk_j = jnp.einsum("bkgst,bkgsh->bkth", ds.astype(q.dtype), q)
+        dv_j = jnp.einsum("bkgst,bkgsh->bkth", p.astype(dout.dtype), dout)
+        return None, (dk_j, dv_j)
+
+    _, (dks, dvs) = jax.lax.scan(dkv_body, None, (ks, vs, kps, kvs))
+    dk = dks.transpose(1, 2, 0, 3, 4).reshape(B, K, nb * blk, H)[:, :, :T]
+    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(B, K, nb * blk, H)[:, :, :T]
+
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None, None)
+
+
+flash_attention_grouped.defvjp(_flash_fwd_vjp, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, q_pos, k_pos,
+                    k_valid: Optional[jnp.ndarray] = None,
+                    causal: bool = True, window: int = 0,
+                    block: int = 1024):
+    """Standard layout wrapper. q: (B,S,N,H), k/v: (B,T,K,H) -> (B,S,N,H)."""
+    B, S, N, H = q.shape
+    K = k.shape[2]
+    G = N // K
+    qg = q.reshape(B, S, K, G, H).transpose(0, 2, 3, 1, 4)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if k_valid is None:
+        k_valid = jnp.ones((k.shape[1],), bool)
+    out = flash_attention_grouped(qg, kt, vt,
+                                  q_pos.astype(jnp.int32),
+                                  k_pos.astype(jnp.int32), k_valid,
+                                  causal, window, block)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, N, H)

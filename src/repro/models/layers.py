@@ -1,0 +1,226 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (full, sliding-
+window, cross) with training, prefill and single-token decode paths.
+
+All functions are pure; parameters are plain pytrees (dicts of arrays).
+Matmuls run in the config compute dtype (bf16 on TPU); softmax and norms
+accumulate in float32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+# use blockwise attention once the score matrix would exceed ~2k x 2k
+FLASH_THRESHOLD = 2048 * 2048
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Statistics in f32, application in the compute dtype.
+
+    Applying in bf16 keeps the backward pass (and therefore the per-layer
+    tensor-parallel all-reduces of dx) in bf16 — computing the whole norm
+    in f32 doubled every TP collective (§Perf H3)."""
+    dtype = x.dtype
+    # square in the compute dtype, ACCUMULATE in f32: a full f32 copy of x
+    # would get hoisted out of the backward scan as an O(L*B*S*d) buffer
+    # (12.8 GB/chip on deepseek-67b — §Perf H3 iter 2)
+    # the explicit astype puts a convert on the AD path, so the cotangent
+    # of x comes back DOWNCAST to bf16 (mean(..., dtype=f32) alone leaves
+    # dx in f32, and XLA then saves the whole residual stack in f32)
+    var = jnp.mean(jnp.square(x).astype(jnp.float32), axis=-1,
+                   keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(dtype)
+    return x * inv * (1.0 + scale.astype(dtype))
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (B, S, N, H); positions: (B, S) or (S,)."""
+    h = x.shape[-1]
+    half = h // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+class KVCache(NamedTuple):
+    """Decode-time attention cache.
+
+    k, v: (B, S_cache, K, H). For sliding-window layers, S_cache == window
+    and the buffer is a ring indexed by position % window; `slot_pos`
+    records the absolute position stored in each slot (-1 = empty).
+    """
+    k: jnp.ndarray
+    v: jnp.ndarray
+    slot_pos: jnp.ndarray      # (S_cache,) int32
+
+
+def init_kv_cache(batch: int, length: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, length, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, length, n_kv, head_dim), dtype),
+        slot_pos=jnp.full((length,), -1, jnp.int32),
+    )
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q: (B,S,N,H), k: (B,T,K,H) -> scores (B,K,G,S,T) with N = K*G."""
+    B, S, N, H = q.shape
+    K = k.shape[2]
+    G = N // K
+    qg = q.reshape(B, S, K, G, H)
+    return jnp.einsum("bskgh,btkh->bkgst", qg, k) / jnp.sqrt(H).astype(q.dtype)
+
+
+def _gqa_out(probs: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """probs: (B,K,G,S,T), v: (B,T,K,H) -> (B,S,N,H)."""
+    B, K, G, S, T = probs.shape
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, K * G, -1)
+
+
+def _masked_softmax(scores: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # rows with no valid key (fully masked) -> zeros, not NaN
+    probs = jnp.where(jnp.any(mask, axis=-1, keepdims=True), probs, 0.0)
+    return probs
+
+
+def attention_train(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                    positions: jnp.ndarray, causal: bool = True,
+                    window: int = 0,
+                    kv_override: Optional[jnp.ndarray] = None,
+                    kv_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence attention (training / encoder / prefill compute).
+
+    kv_override: (B, T, d) encoder output for cross-attention (then causal
+    and window are ignored and kv_mask (B, T) masks padding).
+    """
+    cdt = x.dtype
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(cdt))
+    src = x if kv_override is None else kv_override.astype(cdt)
+    k = jnp.einsum("btd,dkh->btkh", src, p["wk"].astype(cdt))
+    v = jnp.einsum("btd,dkh->btkh", src, p["wv"].astype(cdt))
+
+    if kv_override is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    # Long sequences: blockwise (flash) attention — O(S) memory instead of
+    # materializing the (S, T) score matrix (impossible at 32k context).
+    S_q, T_k = q.shape[1], k.shape[1]
+    if kv_override is None and S_q * T_k >= FLASH_THRESHOLD and S_q > 1:
+        from repro.models.attention_core import flash_attention
+        pos1d = positions if positions.ndim == 1 else positions[0]
+        out = flash_attention(q, k, v, q_pos=pos1d, k_pos=pos1d,
+                              causal=causal, window=window)
+        return jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(cdt))
+
+    scores = _gqa_scores(q, k)                                  # (B,K,G,S,T)
+    S, T = scores.shape[-2], scores.shape[-1]
+    if kv_override is not None:
+        mask = jnp.ones((S, T), bool) if kv_mask is None \
+            else kv_mask[:, None, None, None, :]
+    else:
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(T)[None, :]
+        mask = jnp.ones((S, T), bool)
+        if causal:
+            mask &= j <= i
+        if window:
+            mask &= j > i - window
+    probs = _masked_softmax(scores, mask).astype(cdt)
+    out = _gqa_out(probs, v)
+    return jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(cdt))
+
+
+def attention_prefill(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                      positions: jnp.ndarray, window: int = 0,
+                      cache_len: Optional[int] = None):
+    """Causal attention over the prompt; returns (out, KVCache)."""
+    cdt = x.dtype
+    B, S, _ = x.shape
+    out = attention_train(p, x, cfg, positions=positions, causal=True,
+                          window=window)
+    k = jnp.einsum("btd,dkh->btkh", x, p["wk"].astype(cdt))
+    v = jnp.einsum("btd,dkh->btkh", x, p["wv"].astype(cdt))
+    k = rope(k, positions, cfg.rope_theta)
+    L = cache_len or S
+    if window:
+        L = min(L, window)
+    pos1d = positions if positions.ndim == 1 else positions[0]
+    if not window:
+        assert L >= S, f"cache_len {L} < seq {S} needs a sliding window"
+    if L >= S:
+        pad = L - S
+        cache = KVCache(
+            k=jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            v=jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            slot_pos=jnp.pad(pos1d.astype(jnp.int32), (0, pad),
+                             constant_values=-1),
+        )
+    else:  # ring buffer keeps the last L positions at slot pos % L
+        keep = slice(S - L, S)
+        kk, vv, pp = k[:, keep], v[:, keep], pos1d[keep].astype(jnp.int32)
+        slots = pp % L
+        order = jnp.argsort(slots)
+        cache = KVCache(k=kk[:, order], v=vv[:, order], slot_pos=pp[order])
+    return out, cache
+
+
+def attention_decode(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                     position: jnp.ndarray, cache: KVCache,
+                     window: int = 0):
+    """Single-token decode. x: (B, 1, d); position: scalar int32.
+
+    Returns (out (B,1,d), new_cache). The cache is a ring buffer when
+    `window > 0` (slot = position % window), else direct-indexed.
+    """
+    cdt = x.dtype
+    B = x.shape[0]
+    L = cache.k.shape[1]
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(cdt))
+    k_new = jnp.einsum("bsd,dkh->bskh", x, p["wk"].astype(cdt))
+    v_new = jnp.einsum("bsd,dkh->bskh", x, p["wv"].astype(cdt))
+    pos = jnp.asarray(position, jnp.int32)
+    q = rope(q, pos[None, None].astype(jnp.float32) * jnp.ones((B, 1)), cfg.rope_theta)
+    k_new = rope(k_new, pos[None, None].astype(jnp.float32) * jnp.ones((B, 1)),
+                 cfg.rope_theta)
+
+    slot = jnp.where(window > 0, pos % L, pos)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(cache.slot_pos, pos[None], (slot,))
+
+    scores = _gqa_scores(q, k)                                   # (B,K,G,1,L)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window:
+        valid &= slot_pos > pos - window
+    probs = _masked_softmax(scores, valid[None, None, None, None, :]).astype(cdt)
+    out = _gqa_out(probs, v)
+    out = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(cdt))
+    return out, KVCache(k, v, slot_pos)
+
+
+def init_attention_params(key, cfg: ModelConfig, dtype) -> dict:
+    d, N, K, H = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(k1, (d, N, H)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, K, H)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, K, H)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (N, H, d)) * (N * H) ** -0.5).astype(dtype),
+    }

@@ -1,0 +1,38 @@
+"""Feed-forward variants: SwiGLU (llama), squared-ReLU (nemotron), GELU/GeGLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    cdt = x.dtype
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cdt))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(cdt))
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = g * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(cdt))
+        if act == "squared_relu":
+            h = jnp.square(jax.nn.relu(h))
+        elif act == "gelu":
+            h = jax.nn.gelu(h)
+        else:
+            raise ValueError(act)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cdt))
+
+
+def init_mlp_params(key, cfg: ModelConfig, d_ff: int, dtype) -> dict:
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    si, so = d ** -0.5, d_ff ** -0.5
+    p = {
+        "w_up": (jax.random.normal(k2, (d, d_ff)) * si).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d)) * so).astype(dtype),
+    }
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(k1, (d, d_ff)) * si).astype(dtype)
+    return p

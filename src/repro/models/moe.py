@@ -1,0 +1,135 @@
+"""Mixture-of-Experts layer: shared + routed experts, top-k router.
+
+Dispatch is gather/scatter-based (capacity-bounded, token-dropping), the
+EP-friendly formulation: tokens are gathered into dense (E, C, d) expert
+batches, experts run as one batched einsum on stacked weights (sharded
+over the `model` mesh axis = expert parallelism), and results scatter-add
+back with router combine weights. GSPMD inserts the all-to-alls at the
+data<->expert sharding boundary.
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+# Optional sharding constraints for the dispatch/combine boundary, set by
+# the launcher (§Perf H2): without them GSPMD replicates the (E, C, d)
+# expert batches across the data axis.
+_MOE_SHARDING: dict | None = None
+
+
+@contextmanager
+def moe_sharding(*, expert_batch, tokens):
+    """expert_batch: spec for (E, C, d) tensors; tokens: spec for (T, d)."""
+    global _MOE_SHARDING
+    prev = _MOE_SHARDING
+    _MOE_SHARDING = {"expert_batch": expert_batch, "tokens": tokens}
+    try:
+        yield
+    finally:
+        _MOE_SHARDING = prev
+
+
+def _wsc(x, key):
+    if _MOE_SHARDING is not None and _MOE_SHARDING.get(key) is not None:
+        return jax.lax.with_sharding_constraint(x, _MOE_SHARDING[key])
+    return x
+
+
+def _expert_ffn(p: dict, xe: jnp.ndarray, act: str) -> jnp.ndarray:
+    """xe: (E, C, d) -> (E, C, d) with stacked per-expert weights."""
+    cdt = xe.dtype
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(cdt))
+        u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(cdt))
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = g * u
+    else:
+        h = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(cdt))
+        h = jnp.square(jax.nn.relu(h)) if act == "squared_relu" else jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(cdt))
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, d). Returns (out, aux) with router load-balance metrics."""
+    mc = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = mc.n_experts, mc.top_k
+    C = max(1, math.ceil(T * K * mc.capacity_factor / E))
+    xf = x.reshape(T, d)
+
+    # ---- router (float32 for numerics) ----
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))           # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                          # (T, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- capacity-bounded slot assignment ----
+    flat_e = top_e.reshape(-1)                                      # (T*K,)
+    flat_w = top_w.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)             # (T*K, E)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, 0) - 1,
+                              flat_e[:, None], axis=1)[:, 0]        # (T*K,)
+    tok = jnp.arange(T * K) // K
+
+    idx_table = jnp.zeros((E, C), jnp.int32).at[flat_e, pos].set(
+        tok, mode="drop")                                           # (E, C)
+    w_table = jnp.zeros((E, C), jnp.float32).at[flat_e, pos].set(
+        flat_w, mode="drop")
+    valid = jnp.zeros((E, C), bool).at[flat_e, pos].set(True, mode="drop")
+
+    # ---- expert compute on dense (E, C, d) batches ----
+    xf = _wsc(xf, "tokens")
+    xe = jnp.take(xf, idx_table.reshape(-1), axis=0).reshape(E, C, d)
+    xe = _wsc(xe * valid[..., None].astype(xe.dtype), "expert_batch")
+    ye = _wsc(_expert_ffn(p["experts"], xe, cfg.mlp_act), "expert_batch")
+
+    # ---- combine (scatter-add with router weights) ----
+    contrib = ye * (w_table * valid)[..., None].astype(ye.dtype)
+    out = jnp.zeros((T, d), ye.dtype).at[idx_table.reshape(-1)].add(
+        contrib.reshape(-1, d))
+    out = _wsc(out, "tokens")
+
+    # ---- shared (always-on) experts ----
+    if mc.n_shared:
+        from repro.models.mlp import mlp_apply
+        out = out + mlp_apply(p["shared"], xf[None], cfg.mlp_act)[0]
+
+    # ---- router losses (Switch-style balance + z-loss) ----
+    f = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    pbar = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(f * pbar)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - jnp.sum(valid) / (T * K)
+    aux = {"moe_aux_loss": aux_loss, "moe_z_loss": z_loss,
+           "moe_drop_frac": dropped}
+    return out.reshape(B, S, d), aux
+
+
+def init_moe_params(key, cfg: ModelConfig, dtype) -> dict:
+    from repro.models.mlp import init_mlp_params
+    mc = cfg.moe
+    d, E, f = cfg.d_model, mc.n_experts, mc.d_expert
+    keys = jax.random.split(key, 6)
+    si, so = d ** -0.5, f ** -0.5
+    experts = {
+        "w_up": (jax.random.normal(keys[0], (E, d, f)) * si).astype(dtype),
+        "w_down": (jax.random.normal(keys[1], (E, f, d)) * so).astype(dtype),
+    }
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        experts["w_gate"] = (jax.random.normal(keys[2], (E, d, f)) * si).astype(dtype)
+    p = {
+        "router": (jax.random.normal(keys[3], (d, E)) * si).astype(jnp.float32),
+        "experts": experts,
+    }
+    if mc.n_shared:
+        p["shared"] = init_mlp_params(keys[4], cfg, mc.n_shared * f, dtype)
+    return p

@@ -1,0 +1,124 @@
+"""Griffin-style recurrent block: temporal conv + RG-LRU (RecurrentGemma).
+
+The RG-LRU recurrence (Griffin, arXiv:2402.19427):
+
+    r_t = sigmoid(W_a u_t + b_a)            recurrence gate
+    i_t = sigmoid(W_i u_t + b_i)            input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training/prefill evaluates the linear recurrence with an associative scan
+(log-depth on TPU); decode carries (h, conv window) state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+class RecurrentCache(NamedTuple):
+    h: jnp.ndarray          # (B, d_rnn) RG-LRU hidden state
+    conv: jnp.ndarray       # (B, kernel-1, d_rnn) trailing conv inputs
+
+
+def _causal_depthwise_conv(u: jnp.ndarray, w: jnp.ndarray,
+                           carry: jnp.ndarray | None = None) -> jnp.ndarray:
+    """u: (B, S, D), w: (k, D) depthwise causal conv; carry: (B, k-1, D)."""
+    k = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([carry.astype(u.dtype), u], axis=1)
+    out = sum(ext[:, i:i + u.shape[1]] * w[i].astype(u.dtype) for i in range(k))
+    return out
+
+
+def _rglru_gates(p: dict, u: jnp.ndarray, c: float):
+    f32 = jnp.float32
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", u.astype(f32),
+                                  p["w_a"].astype(f32)) + p["b_a"].astype(f32))
+    i = jax.nn.sigmoid(jnp.einsum("...d,de->...e", u.astype(f32),
+                                  p["w_i"].astype(f32)) + p["b_i"].astype(f32))
+    log_a = -c * jax.nn.softplus(p["lam"].astype(f32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(f32))
+    return a, b
+
+
+def rglru_scan(p: dict, u: jnp.ndarray, c: float) -> jnp.ndarray:
+    """Full-sequence RG-LRU via associative scan. u: (B, S, D)."""
+    a, b = _rglru_gates(p, u, c)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return ar * al, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype)
+
+
+def rglru_step(p: dict, u: jnp.ndarray, h: jnp.ndarray, c: float):
+    """One decode step. u: (B, 1, D), h: (B, D) -> (y (B,1,D), h')."""
+    a, b = _rglru_gates(p, u, c)
+    h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h_new[:, None].astype(u.dtype), h_new.astype(jnp.float32)
+
+
+def recurrent_block_train(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Griffin recurrent block, full sequence. x: (B, S, d_model)."""
+    rc = cfg.rglru
+    cdt = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate"].astype(cdt)))
+    u = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(cdt))
+    u = _causal_depthwise_conv(u, p["conv_w"])
+    h = rglru_scan(p, u, rc.c)
+    return jnp.einsum("bse,ed->bsd", h * gate, p["w_o"].astype(cdt))
+
+
+def recurrent_block_decode(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                           cache: RecurrentCache) -> Tuple[jnp.ndarray, RecurrentCache]:
+    """One-token decode. x: (B, 1, d_model)."""
+    rc = cfg.rglru
+    cdt = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate"].astype(cdt)))
+    u_in = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(cdt))
+    u = _causal_depthwise_conv(u_in, p["conv_w"], carry=cache.conv)
+    conv_new = jnp.concatenate([cache.conv[:, 1:], u_in.astype(cache.conv.dtype)],
+                               axis=1)
+    y, h_new = rglru_step(p, u, cache.h, rc.c)
+    out = jnp.einsum("bse,ed->bsd", y * gate, p["w_o"].astype(cdt))
+    return out, RecurrentCache(h=h_new, conv=conv_new)
+
+
+def init_recurrent_cache(batch: int, cfg: ModelConfig) -> RecurrentCache:
+    rc = cfg.rglru
+    dr = rc.d_rnn or cfg.d_model
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return RecurrentCache(
+        h=jnp.zeros((batch, dr), jnp.float32),
+        conv=jnp.zeros((batch, rc.conv_kernel - 1, dr), cdt),
+    )
+
+
+def init_recurrent_params(key, cfg: ModelConfig, dtype) -> dict:
+    rc = cfg.rglru
+    d = cfg.d_model
+    dr = rc.d_rnn or d
+    keys = jax.random.split(key, 6)
+    return {
+        "w_gate": (jax.random.normal(keys[0], (d, dr)) * d ** -0.5).astype(dtype),
+        "w_x": (jax.random.normal(keys[1], (d, dr)) * d ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(keys[2], (rc.conv_kernel, dr))
+                   * rc.conv_kernel ** -0.5).astype(dtype),
+        "w_a": (jax.random.normal(keys[3], (dr, dr)) * dr ** -0.5).astype(dtype),
+        "b_a": jnp.zeros((dr,), dtype),
+        "w_i": (jax.random.normal(keys[4], (dr, dr)) * dr ** -0.5).astype(dtype),
+        "b_i": jnp.zeros((dr,), dtype),
+        # Lambda init so that a ~ U[0.9, 0.999]^c at r=1 (Griffin appendix)
+        "lam": jnp.linspace(0.1, 2.0, dr).astype(dtype),
+        "w_o": (jax.random.normal(keys[5], (dr, d)) * dr ** -0.5).astype(dtype),
+    }

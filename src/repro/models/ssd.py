@@ -1,0 +1,205 @@
+"""Mamba-2 SSD (state-space duality) layer, arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split
+into chunks of length Q; within-chunk terms are computed as masked
+"attention-like" einsums (the dual quadratic form, MXU-friendly), and
+chunk-boundary states are carried with a short sequential scan — O(L)
+overall with matmul-dominated inner work.
+
+Decode carries the (B, H, P, N) SSM state and a depthwise-conv window.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.rglru import _causal_depthwise_conv
+
+
+class SsdCache(NamedTuple):
+    state: jnp.ndarray      # (B, H, P, N) float32
+    conv: jnp.ndarray       # (B, k-1, conv_dim)
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} a[..., k].
+
+    a: (..., Q) -> (..., Q, Q), lower-triangular validity.
+    """
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(Q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dtA: jnp.ndarray, B: jnp.ndarray,
+                C: jnp.ndarray, chunk: int,
+                init_state: jnp.ndarray | None = None):
+    """SSD core. x: (b, l, h, p) [already multiplied by dt], dtA: (b, l, h),
+    B, C: (b, l, h, n) (groups pre-broadcast to heads). Returns (y, final_state).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    orig_l = l
+    if l % chunk:                       # pad to a chunk multiple; dtA = 0 and
+        pad = chunk - l % chunk         # B = 0 on padding leaves state exact
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtA = jnp.pad(dtA, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = x.shape[1]
+    c = l // chunk
+    f32 = jnp.float32
+
+    xr = x.reshape(b, c, chunk, h, p)
+    Ar = dtA.reshape(b, c, chunk, h).astype(f32)
+    Br = B.reshape(b, c, chunk, h, n)
+    Cr = C.reshape(b, c, chunk, h, n)
+
+    A_cum = jnp.cumsum(Ar, axis=2)                               # (b,c,q,h)
+    # ---- intra-chunk (dual quadratic form) ----
+    L = jnp.exp(_segsum(Ar.transpose(0, 1, 3, 2)))               # (b,c,h,q,q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cr, Br)            # (b,c,h,q,k)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp",
+                        (scores * L).astype(x.dtype), xr)
+
+    # ---- chunk states ----
+    decay_states = jnp.exp(A_cum[:, :, -1:, :] - A_cum)          # (b,c,q,h)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Br,
+                        decay_states.astype(x.dtype), xr)        # (b,c,h,p,n)
+
+    # ---- inter-chunk recurrence (sequential over chunks) ----
+    chunk_decay = jnp.exp(A_cum[:, :, -1, :]).astype(f32)        # (b,c,h)
+    s0 = jnp.zeros((b, h, p, n), f32) if init_state is None else init_state
+
+    def step(carry, inp):
+        dec, st = inp                                            # (b,h), (b,h,p,n)
+        new = carry * dec[..., None, None] + st.astype(f32)
+        return new, carry                                        # emit state BEFORE chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)           # (b,c,h,p,n)
+
+    # ---- inter-chunk output ----
+    state_decay = jnp.exp(A_cum).astype(x.dtype)                 # (b,c,q,h)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Cr,
+                       prev_states.astype(x.dtype), state_decay)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y[:, :orig_l], final
+
+
+def _split_proj(p: dict, x: jnp.ndarray, cfg: ModelConfig):
+    sc = cfg.ssd
+    d_in = sc.n_heads * sc.head_dim
+    gn = sc.n_groups * sc.state_dim
+    cdt = x.dtype
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(cdt))
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, xin, Bc, Cc, dt
+
+
+def _prep(p: dict, xin, Bc, Cc, dt, cfg: ModelConfig):
+    sc = cfg.ssd
+    b, l, _ = xin.shape
+    H, P, G, N = sc.n_heads, sc.head_dim, sc.n_groups, sc.state_dim
+    f32 = jnp.float32
+    dt = jax.nn.softplus(dt.astype(f32) + p["dt_bias"].astype(f32))   # (b,l,H)
+    A = -jnp.exp(p["A_log"].astype(f32))                              # (H,)
+    dtA = dt * A[None, None, :]
+    xh = xin.reshape(b, l, H, P)
+    rep = H // G
+    Bh = jnp.repeat(Bc.reshape(b, l, G, N), rep, axis=2)
+    Ch = jnp.repeat(Cc.reshape(b, l, G, N), rep, axis=2)
+    x_dt = xh * dt[..., None].astype(xh.dtype)
+    return x_dt, dtA, Bh, Ch, xh
+
+
+def ssd_block_train(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                    return_state: bool = False):
+    """Full-sequence Mamba-2 block. x: (B, S, d_model)."""
+    sc = cfg.ssd
+    z, xin, Bc, Cc, dt = _split_proj(p, x, cfg)
+    xbc = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    xbc = jax.nn.silu(_causal_depthwise_conv(xbc, p["conv_w"]))
+    d_in = sc.n_heads * sc.head_dim
+    gn = sc.n_groups * sc.state_dim
+    xin, Bc, Cc = jnp.split(xbc, [d_in, d_in + gn], axis=-1)
+
+    x_dt, dtA, Bh, Ch, xh = _prep(p, xin, Bc, Cc, dt, cfg)
+    y, final = ssd_chunked(x_dt, dtA, Bh, Ch, sc.chunk)
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(x.shape[0], x.shape[1], d_in)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(y.dtype))
+    if return_state:
+        return out, final
+    return out
+
+
+def ssd_block_decode(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                     cache: SsdCache) -> Tuple[jnp.ndarray, SsdCache]:
+    """One-token decode. x: (B, 1, d_model); recurrent state update."""
+    sc = cfg.ssd
+    f32 = jnp.float32
+    z, xin, Bc, Cc, dt = _split_proj(p, x, cfg)
+    xbc_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    xbc = jax.nn.silu(_causal_depthwise_conv(xbc_in, p["conv_w"],
+                                             carry=cache.conv))
+    conv_new = jnp.concatenate([cache.conv[:, 1:],
+                                xbc_in.astype(cache.conv.dtype)], axis=1)
+    d_in = sc.n_heads * sc.head_dim
+    gn = sc.n_groups * sc.state_dim
+    xin, Bc, Cc = jnp.split(xbc, [d_in, d_in + gn], axis=-1)
+
+    x_dt, dtA, Bh, Ch, xh = _prep(p, xin, Bc, Cc, dt, cfg)
+    # h' = exp(dtA) h + B (dt*x) ;  y = C h' + D x
+    dA = jnp.exp(dtA[:, 0]).astype(f32)                            # (B,H)
+    outer = jnp.einsum("bhp,bhn->bhpn", x_dt[:, 0].astype(f32),
+                       Bh[:, 0].astype(f32))
+    state = cache.state * dA[..., None, None] + outer
+    y = jnp.einsum("bhn,bhpn->bhp", Ch[:, 0].astype(f32), state)
+    y = y.astype(x.dtype) + xh[:, 0] * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(x.shape[0], 1, d_in)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(y.dtype))
+    return out, SsdCache(state=state, conv=conv_new)
+
+
+def init_ssd_cache(batch: int, cfg: ModelConfig) -> SsdCache:
+    sc = cfg.ssd
+    conv_dim = sc.n_heads * sc.head_dim + 2 * sc.n_groups * sc.state_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return SsdCache(
+        state=jnp.zeros((batch, sc.n_heads, sc.head_dim, sc.state_dim),
+                        jnp.float32),
+        conv=jnp.zeros((batch, sc.conv_kernel - 1, conv_dim), cdt),
+    )
+
+
+def init_ssd_params(key, cfg: ModelConfig, dtype) -> dict:
+    sc = cfg.ssd
+    d = cfg.d_model
+    d_in = sc.n_heads * sc.head_dim
+    gn = sc.n_groups * sc.state_dim
+    proj_out = 2 * d_in + 2 * gn + sc.n_heads
+    conv_dim = d_in + 2 * gn
+    keys = jax.random.split(key, 4)
+    return {
+        "w_in": (jax.random.normal(keys[0], (d, proj_out)) * d ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(keys[1], (sc.conv_kernel, conv_dim))
+                   * sc.conv_kernel ** -0.5).astype(dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(keys[2], (sc.n_heads,),
+                                       minval=jnp.log(1e-3), maxval=jnp.log(1e-1))))
+        ).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, sc.n_heads)).astype(dtype),
+        "D": jnp.ones((sc.n_heads,), dtype),
+        "w_out": (jax.random.normal(keys[3], (d_in, d)) * d_in ** -0.5).astype(dtype),
+    }

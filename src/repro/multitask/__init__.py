@@ -1,0 +1,11 @@
+"""DSML as a framework feature: shared-support multi-task probes."""
+from repro.multitask.sparse_probe import (
+    ProbeData,
+    pool_features,
+    probe_predict,
+    sparse_probe_fit,
+    synthetic_probe_tasks,
+)
+
+__all__ = ["ProbeData", "pool_features", "probe_predict",
+           "sparse_probe_fit", "synthetic_probe_tasks"]

@@ -1,0 +1,56 @@
+"""Serving steps: prefill and single-token decode (the units the dry-run
+lowers for the inference shapes), plus a simple batched greedy engine for
+the runnable examples."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (
+    Batch, forward_decode, forward_prefill, init_caches,
+)
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: Optional[int] = None):
+    def prefill_step(params, batch: Batch):
+        logits, caches = forward_prefill(params, cfg, batch,
+                                         cache_len=cache_len)
+        return logits, caches
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """ONE new token against a pre-existing KV/state cache."""
+    def serve_step(params, token, pos, caches):
+        logits, caches = forward_decode(params, cfg, token, pos, caches)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token, logits, caches
+    return serve_step
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: jnp.ndarray,
+                    steps: int, cache_extra: int = 0,
+                    frontend: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Batched greedy decoding. prompt: (B, S) -> (B, S + steps)."""
+    B, S = prompt.shape
+    off = cfg.n_frontend_tokens if cfg.arch_type == "vlm" and frontend is not None else 0
+    cache_len = S + off + steps + cache_extra
+    logits, caches = forward_prefill(params, cfg,
+                                     Batch(tokens=prompt, frontend=frontend),
+                                     cache_len=cache_len)
+    tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    serve_step = make_serve_step(cfg)
+
+    def body(carry, i):
+        tok, caches = carry
+        pos = (S + off + i).astype(jnp.int32)
+        nxt, _, caches = serve_step(params, tok[:, None], pos, caches)
+        return (nxt, caches), tok
+
+    (last, _), toks = jax.lax.scan(body, (tok0, caches),
+                                   jnp.arange(steps, dtype=jnp.int32))
+    gen = jnp.concatenate([toks.T, last[:, None]], axis=1)[:, :steps]
+    return jnp.concatenate([prompt, gen], axis=1)

@@ -1,0 +1,249 @@
+"""Sharding rules: map parameter/activation/cache pytrees to PartitionSpecs.
+
+Scheme (see DESIGN.md §4):
+  * `model` axis — tensor parallel: attention heads, ffn width, experts,
+    vocab (embedding rows / head columns), decode-cache sequence.
+  * `data` axis — FSDP: the d_model dimension of weight matrices, batch
+    dimension of activations.
+  * `pod` axis (multi-pod mesh) — pure data parallelism: parameters are
+    REPLICATED across pods (grad all-reduce crosses the DCN once per
+    step); the batch is sharded over (pod, data).
+
+Rules are rank-aligned from the RIGHT so stacked per-layer parameters
+(leading scan axis) inherit the same spec with a leading None. Every
+proposed axis is validated for divisibility against the actual dim size;
+rules may carry fallback proposals (embed/head vocab padding aside), and
+axes that still do not divide are DROPPED (replicated) — see fit_spec for
+why moving TP onto head_dim is worse than replicating a small projection.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data-parallel activation axes: ('pod', 'data') when multi-pod."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _align(shape: Sequence[int], right: Sequence) -> list:
+    nd = len(shape)
+    spec: list = [None] * nd
+    take = min(len(right), nd)
+    if take:
+        spec[nd - take:] = list(right[len(right) - take:])
+    return spec
+
+
+def _fits(shape: Sequence[int], spec: Sequence, mesh: Mesh) -> bool:
+    return all(ax is None or shape[i] % _axis_size(mesh, ax) == 0
+               for i, ax in enumerate(spec))
+
+
+def fit_spec(shape: Sequence[int], right: Sequence, mesh: Mesh) -> P:
+    """Right-align `right` onto `shape`; axes that do not divide their dim
+    are DROPPED (replicated), never moved to another dim — moving TP onto
+    e.g. the head_dim makes RoPE's half-split reshard every layer (GSPMD
+    'involuntary full rematerialization'). Replicating the offending
+    (small) projection matches production TP practice for GQA with
+    kv_heads < TP degree."""
+    spec = _align(shape, right)
+    for i, ax in enumerate(spec):
+        if ax is not None and shape[i] % _axis_size(mesh, ax) != 0:
+            spec[i] = None
+    return P(*spec)
+
+
+def fit_first(shape: Sequence[int], proposals: Sequence[Sequence],
+              mesh: Mesh) -> P:
+    """Try each proposal in order; first that fully divides wins. If none
+    fits, fall back to the first proposal with failing axes dropped."""
+    for right in proposals:
+        spec = _align(shape, right)
+        if _fits(shape, spec, mesh):
+            return P(*spec)
+    return fit_spec(shape, proposals[0], mesh)
+
+
+# (path-substring, proposal list) — first path match wins; within a match,
+# the first proposal whose axes all divide is used (else axes are dropped).
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Tuple[Optional[str], ...], ...]], ...] = (
+    # MoE expert stacks (E, d, f) / (E, f, d): experts over `model` (EP)
+    ("experts/w_down", (("model", None, "data"),)),
+    ("experts/",       (("model", "data", None),)),
+    ("router",         ((None, "model"),)),
+    # attention projections
+    ("wq", (("data", "model", None),)),
+    ("wk", (("data", "model", None),)),
+    ("wv", (("data", "model", None),)),
+    ("wo", (("model", None, "data"),)),
+    # dense mlp / shared experts / griffin gate+in projections
+    ("w_down", (("model", "data"),)),
+    ("w_gate", (("data", "model"),)),
+    ("w_up",   (("data", "model"),)),
+    # griffin rg-lru
+    ("rec/w_x", (("data", "model"),)),
+    ("rec/w_a", ((None, "model"),)),
+    ("rec/w_i", ((None, "model"),)),
+    ("rec/w_o", (("model", "data"),)),
+    ("rec/conv_w", ((None, "model"),)),
+    ("rec/b_a", (("model",),)),
+    ("rec/b_i", (("model",),)),
+    ("rec/lam", (("model",),)),
+    # mamba2 ssd
+    ("ssd/w_in",  (("data", "model"),)),
+    ("ssd/w_out", (("model", "data"),)),
+    ("ssd/conv_w", ((None, "model"),)),
+    ("ssd/dt_bias", (("model",),)),
+    ("ssd/A_log", (("model",),)),
+    ("ssd/D", (("model",),)),
+    # embeddings: vocab over model, d_model over data(fsdp);
+    # odd vocab sizes fall back to sharding d_model over BOTH axes
+    ("embed", (("model", "data"), (None, ("data", "model")))),
+    ("head",  (("data", "model"), (("data", "model"), None))),
+    # norms replicated
+    ("norm", ((),)),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _spec_for(path: str, shape, mesh: Mesh) -> P:
+    for frag, proposals in _PARAM_RULES:
+        if frag in path:
+            return fit_first(shape, proposals, mesh)
+    return P()  # replicate by default
+
+
+def _strip_data(spec: P) -> P:
+    """Remove the `data` axis from a spec (ZeRO-1: bf16 params are
+    replicated over data; TP over model only)."""
+    def strip(ax):
+        if ax == "data":
+            return None
+        if isinstance(ax, tuple):
+            kept = tuple(a for a in ax if a != "data")
+            return kept[0] if len(kept) == 1 else (kept or None)
+        return ax
+    return P(*[strip(ax) for ax in spec])
+
+
+def opt_pspecs(params_tree, mesh: Mesh):
+    """ZeRO-sharded specs (model TP + data sharding) for master/moments."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(_path_str(path), leaf.shape, mesh),
+        params_tree)
+
+
+def param_pspecs(params_tree, mesh: Mesh):
+    """bf16 forward-parameter specs: TP over `model`, replicated over
+    `data`/`pod` (ZeRO-1, see optim.adamw)."""
+    return jax.tree.map(_strip_data, opt_pspecs(params_tree, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_state_pspecs(state, mesh: Mesh):
+    from repro.optim.adamw import AdamWState
+    from repro.training.step import TrainState
+    pspecs = param_pspecs(state.params, mesh)
+    ospecs = opt_pspecs(state.params, mesh)
+    return TrainState(
+        params=pspecs,
+        opt=AdamWState(master=ospecs, mu=ospecs, nu=ospecs, count=P()),
+        step=P(),
+    )
+
+
+def _dp_or_none(mesh: Mesh, batch_size: int):
+    dp = dp_axes(mesh)
+    total = 1
+    for a in dp:
+        total *= mesh.shape[a]
+    return dp if batch_size % total == 0 and batch_size >= total else None
+
+
+def batch_pspecs(mesh: Mesh, batch_size: int, has_frontend: bool = False):
+    """Batch sharding: batch over (pod, data)."""
+    from repro.models import Batch
+    b = _dp_or_none(mesh, batch_size)
+    tok = P(b, None)
+    return Batch(tokens=tok, labels=tok,
+                 frontend=P(b, None, None) if has_frontend else None)
+
+
+def logits_pspec(mesh: Mesh, vocab: int, seq: int) -> P:
+    """(B, S, V): batch over dp; vocab over model, falling back to the
+    sequence dim when the vocab is not divisible (odd vocab sizes)."""
+    if vocab % mesh.shape["model"] == 0:
+        return P(dp_axes(mesh), None, "model")
+    if seq % mesh.shape["model"] == 0:
+        return P(dp_axes(mesh), "model", None)
+    return P(dp_axes(mesh), None, None)
+
+
+def cache_pspecs(mesh: Mesh, caches, batch_size: int):
+    """Decode caches: batch over dp (if divisible), cache seq over model.
+
+    KVCache k/v (B, S, K, H) -> P(dp, 'model', None, None) (seq-parallel)
+    slot_pos (S,)            -> P() (replicated, tiny)
+    Recurrent h (B, D)       -> P(dp, 'model')
+    conv (B, k, D)           -> P(dp, None, 'model')
+    Ssd state (B, H, P, N)   -> P(dp, 'model', None, None)
+    enc_out (B, F, d)        -> P(dp, None, None)
+    """
+    b = _dp_or_none(mesh, batch_size)
+    # field-name rules, right-aligned: stacked (L, ...) leaves inherit a
+    # leading None automatically. KV k/v (B,S,K,H): seq over model
+    # (sequence-parallel cache); SSD state (B,H,P,N): heads over model;
+    # conv carry (B,k-1,D): channels over model; RG-LRU h (B,D) likewise.
+    rules = (
+        ("slot_pos", None),
+        ("enc_out", (b, None, None)),
+        ("/k", (b, "model", None, None)),
+        ("/v", (b, "model", None, None)),
+        ("state", (b, "model", None, None)),
+        ("conv", (b, None, "model")),
+        ("/h", (b, "model")),
+    )
+
+    def spec(leaf_path, leaf):
+        path = _path_str(leaf_path)
+        for frag, right in rules:
+            if frag in path or path.endswith(frag.strip("/")):
+                if right is None:
+                    return P()
+                return fit_spec(leaf.shape, right, mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, caches)
+
+
+def named(mesh: Mesh, tree):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,120 @@
+"""Training step: cross-entropy loss + AdamW update, sharding-aware.
+
+`make_train_step(cfg)` returns a pure function
+    train_step(state, batch) -> (state, metrics)
+suitable for `jax.jit` with in/out shardings from `repro.sharding`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Batch, forward_train, init_params
+from repro.models.config import ModelConfig
+from repro.optim.adamw import (
+    AdamWState, adamw_init, adamw_update, warmup_cosine,
+)
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+    step: jnp.ndarray
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  pspec=None, vocab: Optional[int] = None) -> jnp.ndarray:
+    """Token-mean CE in float32; labels == -1 are masked out.
+
+    logits: (B, S, Vp) (vocab-sharded, possibly padded — pad columns are
+    masked so the loss is exact); labels: (B, S).
+    """
+    if pspec is not None:
+        logits = jax.lax.with_sharding_constraint(logits, pspec)
+    logits = logits.astype(jnp.float32)
+    if vocab is not None and vocab < logits.shape[-1]:
+        pad_mask = jnp.arange(logits.shape[-1]) < vocab
+        logits = jnp.where(pad_mask, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig, *, remat: bool = True, logits_pspec=None):
+    def loss_fn(params, batch: Batch):
+        logits, aux = forward_train(params, cfg, batch, remat=remat)
+        ce = cross_entropy(logits, batch.labels, logits_pspec,
+                           vocab=cfg.vocab)
+        return ce + aux, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, *, peak_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10000,
+                    weight_decay: float = 0.1, clip_norm: float = 1.0,
+                    remat: bool = True, logits_pspec=None,
+                    microbatches: int = 1, grads_pspec=None):
+    """`microbatches > 1` enables gradient accumulation (peak activation
+    memory drops by the same factor). `grads_pspec` (usually the ZeRO
+    opt specs) keeps the f32 accumulator sharded over `data`."""
+    loss_fn = make_loss_fn(cfg, remat=remat, logits_pspec=logits_pspec)
+
+    def constrain(g):
+        if grads_pspec is None:
+            return g
+        return jax.lax.with_sharding_constraint(g, grads_pspec)
+
+    def grads_of(params, batch):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, parts, grads
+
+    def train_step(state: TrainState, batch: Batch):
+        if microbatches > 1:
+            def split(x):
+                if x is None:
+                    return None
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            mb = Batch(*(split(x) for x in batch))
+
+            def acc_fn(carry, b):
+                loss_a, grads_a = carry
+                loss, parts, grads = grads_of(state.params, Batch(*b))
+                grads = constrain(jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), grads_a, grads))
+                return (loss_a + loss, grads), parts
+
+            zeros = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params))
+            (loss, grads), parts = jax.lax.scan(
+                acc_fn, (jnp.zeros((), jnp.float32), zeros), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            parts = jax.tree.map(lambda x: x[-1], parts)
+        else:
+            loss, parts, grads = grads_of(state.params, batch)
+            grads = constrain(jax.tree.map(
+                lambda g: g.astype(jnp.float32), grads))
+
+        lr = warmup_cosine(state.step, peak_lr=peak_lr, warmup=warmup,
+                           total=total_steps)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, lr=lr,
+            weight_decay=weight_decay, clip_norm=clip_norm,
+            grads_pspec=grads_pspec)
+        metrics = {"loss": loss, **parts, **opt_metrics}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig) -> TrainState:
+    params = init_params(key, cfg)
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))

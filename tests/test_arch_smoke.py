@@ -1,0 +1,78 @@
+"""Per-architecture smoke tests: reduced same-family variant, one forward
+and one train step on CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, get_config, smoke
+from repro.models import Batch, forward_train, init_params
+from repro.training.step import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    fe = None
+    if cfg.frontend:
+        fe = 0.01 * jax.random.normal(KEY, (B, cfg.n_frontend_tokens,
+                                            cfg.d_model))
+    return Batch(tokens=tokens, labels=tokens, frontend=fe)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_forward(arch):
+    cfg = smoke(get_config(arch))
+    params = init_params(KEY, cfg)
+    batch = _batch(cfg)
+    logits, aux = forward_train(params, cfg, batch, remat=False)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_train_step(arch):
+    cfg = smoke(get_config(arch))
+    state = init_train_state(KEY, cfg)
+    step = make_train_step(cfg, peak_lr=1e-3, remat=True)
+    batch = _batch(cfg)
+    state2, metrics = jax.jit(step)(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0.0
+    assert int(state2.step) == 1
+    # params actually moved
+    moved = jax.tree.leaves(jax.tree.map(
+        lambda a, b: jnp.any(a != b), state.params, state2.params))
+    assert any(bool(x) for x in moved)
+
+
+def test_loss_decreases_tiny_dense():
+    """A few steps on a tiny dense model must reduce loss on a fixed batch."""
+    cfg = smoke(get_config("granite-3-2b")).replace(
+        compute_dtype="float32", param_dtype="float32")
+    state = init_train_state(KEY, cfg)
+    step = jax.jit(make_train_step(cfg, peak_lr=3e-3, warmup=1,
+                                   total_steps=100))
+    batch = _batch(cfg)
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_microbatched_grads_match_full_batch():
+    """Gradient accumulation must reproduce the full-batch step."""
+    cfg = smoke(get_config("granite-3-2b")).replace(
+        compute_dtype="float32", param_dtype="float32")
+    state = init_train_state(KEY, cfg)
+    batch = _batch(cfg)
+    s1, m1 = jax.jit(make_train_step(cfg, microbatches=1))(state, batch)
+    s2, m2 = jax.jit(make_train_step(cfg, microbatches=2))(state, batch)
+    diffs = jax.tree.leaves(jax.tree.map(
+        lambda a, b: jnp.max(jnp.abs(a - b)), s1.params, s2.params))
+    assert max(float(d) for d in diffs) < 5e-5
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4

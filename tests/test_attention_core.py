@@ -1,0 +1,109 @@
+"""Flash (blockwise) attention vs dense reference: fwd + grads, plus
+hypothesis sweeps over shapes/settings. This is the oracle contract for
+kernels/flash_attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention_core import flash_attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+def dense_ref(q, k, v, causal=True, window=0, k_valid=None):
+    B, S, N, H = q.shape
+    K = k.shape[2]
+    T = k.shape[1]
+    G = N // K
+    qg = q.reshape(B, S, K, G, H)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k) / jnp.sqrt(H)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(T)[None, :]
+    m = jnp.ones((S, T), bool)
+    if causal:
+        m &= j <= i
+    if window:
+        m &= j > i - window
+    if k_valid is not None:
+        m &= k_valid[None, :]
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    p = jnp.where(jnp.any(m, -1, keepdims=True), p, 0)
+    return jnp.einsum("bkgst,btkh->bskgh", p, v).reshape(B, S, N, H)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.integers(8, 150),
+    n=st.sampled_from([2, 4, 8]),
+    kv=st.sampled_from([1, 2]),
+    h=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+    window=st.sampled_from([0, 7, 32]),
+    block=st.sampled_from([16, 64, 1024]),
+)
+def test_flash_matches_dense_reference(s, n, kv, h, causal, window, block):
+    if n % kv:
+        kv = 1
+    key1, key2, key3 = jax.random.split(jax.random.PRNGKey(s * 7 + n), 3)
+    q = jax.random.normal(key1, (2, s, n, h))
+    k = jax.random.normal(key2, (2, s, kv, h))
+    v = jax.random.normal(key3, (2, s, kv, h))
+    pos = jnp.arange(s)
+    out = flash_attention(q, k, v, q_pos=pos, k_pos=pos, causal=causal,
+                          window=window, block=block)
+    ref = dense_ref(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_flash_gradients_match():
+    q = jax.random.normal(KEY, (2, 65, 4, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 65, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 65, 2, 32))
+    pos = jnp.arange(65)
+
+    def loss_flash(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, q_pos=pos, k_pos=pos,
+                                       block=16) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(dense_ref(q, k, v) ** 2)
+
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(gf, gr, "qkv"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4,
+                                   err_msg=f"d{name}")
+
+
+def test_flash_invalid_keys_masked():
+    """k_valid=False keys must not contribute."""
+    S = 32
+    q = jax.random.normal(KEY, (1, S, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, S, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, S, 2, 16))
+    pos = jnp.arange(S)
+    valid = pos < 20
+    out = flash_attention(q, k, v, q_pos=pos, k_pos=pos, k_valid=valid,
+                          causal=True, block=8)
+    # mutate invalid keys: output must not change
+    k2 = k.at[:, 20:].set(99.0)
+    v2 = v.at[:, 20:].set(-99.0)
+    out2 = flash_attention(q, k2, v2, q_pos=pos, k_pos=pos, k_valid=valid,
+                           causal=True, block=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-6)
+
+
+def test_flash_fully_masked_rows_are_zero():
+    """A query with no visible keys returns 0, not NaN."""
+    S = 16
+    q = jax.random.normal(KEY, (1, S, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, S, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, S, 2, 16))
+    out = flash_attention(q, k, v, q_pos=jnp.arange(S), k_pos=jnp.arange(S),
+                          k_valid=jnp.zeros(S, bool), causal=True, block=8)
+    assert bool(jnp.all(out == 0))
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,123 @@
+"""Unit tests for the DSML core solvers (lasso / group lasso / iCAP / debias)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ar_covariance, coherence, debias_lasso, dsml_fit, estimation_error,
+    gen_regression, group_lasso, hamming, icap, inverse_hessian_m, lasso,
+    power_iteration, refit_ols_masked, support_of,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_power_iteration_matches_eigh():
+    A = jax.random.normal(KEY, (50, 50))
+    S = A @ A.T / 50
+    lam = power_iteration(S, iters=200)
+    np.testing.assert_allclose(float(lam), float(jnp.linalg.eigvalsh(S)[-1]), rtol=1e-4)
+
+
+def test_lasso_orthogonal_design_closed_form():
+    """With X^T X / n = I the lasso solution is soft(beta_ols, lam/2)."""
+    n, p = 400, 16
+    X = jnp.eye(p).repeat(n // p, axis=0) * jnp.sqrt(p)  # orthonormal cols: X'X/n = I
+    key1, key2 = jax.random.split(KEY)
+    beta_star = jax.random.normal(key1, (p,))
+    y = X @ beta_star
+    lam = 0.3
+    beta = lasso(X, y, lam, iters=800)
+    # objective (1/n)||y-Xb||^2 + lam|b|_1 with X'X/n=I -> soft(b*, lam/2)
+    expected = jnp.sign(beta_star) * jnp.maximum(jnp.abs(beta_star) - lam / 2, 0)
+    np.testing.assert_allclose(np.asarray(beta), np.asarray(expected), atol=1e-3)
+
+
+def test_lasso_kkt_conditions():
+    data = gen_regression(KEY, m=1, n=80, p=60, s=5)
+    X, y = data.Xs[0], data.ys[0]
+    lam = 0.2
+    b = lasso(X, y, lam, iters=2000)
+    n = X.shape[0]
+    g = 2.0 / n * (X.T @ (X @ b - y))  # grad of (1/n)||y-Xb||^2
+    # KKT: |g_j| <= lam, and g_j = -lam*sign(b_j) where b_j != 0
+    assert float(jnp.max(jnp.abs(g))) <= lam * 1.05
+    active = jnp.abs(b) > 1e-6
+    viol = jnp.where(active, jnp.abs(g + lam * jnp.sign(b)), 0.0)
+    assert float(jnp.max(viol)) < 1e-2
+
+
+def test_group_lasso_recovers_shared_support():
+    data = gen_regression(KEY, m=8, n=100, p=100, s=5, signal_low=0.5)
+    B = group_lasso(data.Xs, data.ys, 0.25, iters=600)
+    assert int(hamming(support_of(B, 1e-3), data.support)) == 0
+
+
+def test_icap_recovers_shared_support():
+    data = gen_regression(KEY, m=8, n=100, p=100, s=5, signal_low=0.5)
+    B = icap(data.Xs, data.ys, 0.4, iters=800)
+    assert int(hamming(support_of(B, 1e-3), data.support)) == 0
+
+
+def test_inverse_hessian_feasible_for_jm_constraint():
+    """The penalized M must satisfy the paper's constraint ||Sig m_j - e_j||_inf <= mu."""
+    data = gen_regression(KEY, m=1, n=120, p=80, s=5)
+    X = data.Xs[0]
+    Sig = X.T @ X / X.shape[0]
+    mu = float(jnp.sqrt(jnp.log(80.0) / 120))
+    M = inverse_hessian_m(Sig, mu, iters=1200)
+    assert float(coherence(Sig, M)) <= mu * 1.02
+
+
+def test_debias_reduces_bias_on_support():
+    """Debiasing should shrink the lasso bias on true nonzeros."""
+    data = gen_regression(jax.random.PRNGKey(3), m=1, n=150, p=100, s=5,
+                          signal_low=0.5)
+    X, y = data.Xs[0], data.ys[0]
+    lam = float(4 * jnp.sqrt(jnp.log(100.0) / 150))
+    mu = float(jnp.sqrt(jnp.log(100.0) / 150))
+    b_hat = lasso(X, y, lam, iters=1000)
+    b_u = debias_lasso(X, y, b_hat, mu)
+    S = data.support
+    bias_lasso = float(jnp.abs(b_hat - data.B[:, 0])[S].mean())
+    bias_debiased = float(jnp.abs(b_u - data.B[:, 0])[S].mean())
+    assert bias_debiased < bias_lasso
+
+
+def test_refit_ols_masked_equals_restricted_ols():
+    n, p = 60, 20
+    X = jax.random.normal(KEY, (n, p))
+    beta = jnp.zeros(p).at[:4].set(jnp.array([1.0, -2.0, 0.5, 3.0]))
+    y = X @ beta
+    support = jnp.arange(p) < 4
+    b = refit_ols_masked(X, y, support)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(beta), atol=1e-4)
+    assert float(jnp.abs(b[4:]).max()) == 0.0
+
+
+def test_dsml_exact_support_recovery_with_theory_threshold():
+    """End-to-end Algorithm 1 on well-separated data."""
+    data = gen_regression(jax.random.PRNGKey(7), m=10, n=100, p=200, s=10,
+                          signal_low=0.3, signal_high=1.0)
+    n, p = 100, 200
+    lam = 4 * jnp.sqrt(jnp.log(float(p)) / n)
+    mu = jnp.sqrt(jnp.log(float(p)) / n)
+    res = dsml_fit(data.Xs, data.ys, lam, mu, Lam=1.0)
+    assert int(hamming(res.support, data.support)) == 0
+    # final estimate beats local lasso in l1/l2 error
+    err_dsml = float(estimation_error(res.beta_tilde.T, data.B))
+    err_lasso = float(estimation_error(res.beta_local.T, data.B))
+    assert err_dsml < err_lasso
+
+
+def test_dsml_refit_variant():
+    data = gen_regression(jax.random.PRNGKey(9), m=6, n=120, p=100, s=6,
+                          signal_low=0.4)
+    lam = 4 * jnp.sqrt(jnp.log(100.0) / 120)
+    mu = jnp.sqrt(jnp.log(100.0) / 120)
+    res = dsml_fit(data.Xs, data.ys, lam, mu, Lam=1.0, refit=True)
+    err = float(estimation_error(res.beta_tilde.T, data.B))
+    res_plain = dsml_fit(data.Xs, data.ys, lam, mu, Lam=1.0)
+    err_plain = float(estimation_error(res_plain.beta_tilde.T, data.B))
+    assert err <= err_plain * 1.05  # refit should not be (much) worse

@@ -1,0 +1,126 @@
+"""Pallas kernel tests: interpret-mode execution vs pure-jnp oracles,
+sweeping shapes and dtypes per kernel (per the kernel contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.group_threshold.ops import group_threshold
+from repro.kernels.group_threshold.ref import group_threshold_ref
+from repro.kernels.ista_step.ops import ista_solve, ista_step
+from repro.kernels.ista_step.ref import ista_step_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# ista_step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [64, 128, 256, 384])
+@pytest.mark.parametrize("r", [1, 8, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ista_step_shapes_dtypes(p, r, dtype):
+    A = jax.random.normal(KEY, (p, p), jnp.float32)
+    Sigma = (A @ A.T / p).astype(dtype)
+    beta = jax.random.normal(jax.random.PRNGKey(1), (p, r), dtype)
+    c = jax.random.normal(jax.random.PRNGKey(2), (p, r), dtype)
+    out = ista_step(Sigma, beta, c, 0.05, 0.2)
+    ref = ista_step_ref(Sigma, beta, c, 0.05, 0.2)
+    tol = 1e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_ista_step_vector_rhs():
+    p = 128
+    A = jax.random.normal(KEY, (p, p))
+    Sigma = A @ A.T / p
+    beta = jax.random.normal(jax.random.PRNGKey(1), (p,))
+    c = jax.random.normal(jax.random.PRNGKey(2), (p,))
+    out = ista_step(Sigma, beta, c, 0.05, 0.2)
+    assert out.shape == (p,)
+    ref = ista_step_ref(Sigma, beta[:, None], c[:, None], 0.05, 0.2)[:, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_ista_solve_matches_fista_solution():
+    """The kernel-driven solver must satisfy the lasso KKT conditions."""
+    p = 128
+    A = jax.random.normal(KEY, (3 * p, p)) / jnp.sqrt(3.0 * p)
+    Sigma = A.T @ A + 0.1 * jnp.eye(p)
+    c = jax.random.normal(jax.random.PRNGKey(1), (p, 1)) * 0.3
+    lam = 0.05
+    beta = ista_solve(Sigma, c, lam, iters=1500)
+    g = Sigma @ beta - c                      # subgradient condition
+    assert float(jnp.max(jnp.abs(g))) <= lam * 1.05
+    active = jnp.abs(beta) > 1e-6
+    viol = jnp.where(active, jnp.abs(g + lam * jnp.sign(beta)), 0.0)
+    assert float(jnp.max(viol)) < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# group_threshold
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p,m", [(64, 4), (256, 10), (1024, 16), (200, 10)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_group_threshold_shapes_dtypes(p, m, dtype):
+    B = jax.random.normal(KEY, (p, m), dtype) * 2.0
+    out, keep = group_threshold(B, 2.0)
+    ref_out, ref_keep = group_threshold_ref(B, 2.0)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref_out, np.float32), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(keep), np.asarray(ref_keep))
+
+
+def test_group_threshold_edge_lambdas():
+    B = jax.random.normal(KEY, (128, 8))
+    out0, keep0 = group_threshold(B, 0.0)
+    assert bool(jnp.all(keep0))                     # every row has norm > 0
+    outinf, keepinf = group_threshold(B, 1e9)
+    assert not bool(jnp.any(keepinf))
+    assert bool(jnp.all(outinf == 0))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,n,k,h", [(128, 4, 4, 32), (256, 8, 2, 64),
+                                     (64, 2, 1, 128), (192, 4, 2, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_shapes_dtypes(s, n, k, h, dtype):
+    q = jax.random.normal(KEY, (2, s, n, h), dtype)
+    kk = jax.random.normal(jax.random.PRNGKey(1), (2, s, k, h), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, s, k, h), dtype)
+    out = flash_attention_op(q, kk, v, causal=True, bq=64, bk=64)
+    ref = flash_attention_ref(q.astype(jnp.float32), kk.astype(jnp.float32),
+                              v.astype(jnp.float32), causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_kernel_sliding_window(window):
+    s = 256
+    q = jax.random.normal(KEY, (1, s, 4, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, s, 4, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, s, 4, 32))
+    out = flash_attention_op(q, k, v, causal=True, window=window,
+                             bq=64, bk=64)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_kernel_noncausal():
+    s = 128
+    q = jax.random.normal(KEY, (1, s, 2, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, s, 2, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, s, 2, 64))
+    out = flash_attention_op(q, k, v, causal=False, bq=32, bk=32)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)

@@ -1,0 +1,131 @@
+"""Model-level property tests: SSD chunk invariance, hybrid pattern
+structure, RG-LRU scan vs sequential reference, MoE invariants, dirty
+model baseline."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.core.dirty import dirty_model
+from repro.core import gen_regression, hamming, support_of
+from repro.models import init_params
+from repro.models.config import SsdConfig
+from repro.models.rglru import (
+    _rglru_gates, init_recurrent_params, rglru_scan,
+)
+from repro.models.ssd import init_ssd_params, ssd_block_train
+from repro.models.moe import init_moe_params, moe_apply
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_ssd_chunk_size_invariance():
+    """The chunked SSD algorithm must give identical output for any chunk."""
+    cfg = smoke(get_config("mamba2-1.3b")).replace(
+        compute_dtype="float32", param_dtype="float32")
+    p = init_ssd_params(KEY, cfg, jnp.float32)
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    outs = []
+    for chunk in (8, 16, 32, 64):
+        c2 = cfg.replace(ssd=dataclasses.replace(cfg.ssd, chunk=chunk))
+        outs.append(np.asarray(ssd_block_train(p, x, c2)))
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=2e-4)
+
+
+def test_ssd_is_causal():
+    """Perturbing future inputs must not change past outputs."""
+    cfg = smoke(get_config("mamba2-1.3b")).replace(
+        compute_dtype="float32", param_dtype="float32")
+    p = init_ssd_params(KEY, cfg, jnp.float32)
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (1, 48, cfg.d_model))
+    y1 = ssd_block_train(p, x, cfg)
+    x2 = x.at[:, 30:].set(5.0)
+    y2 = ssd_block_train(p, x2, cfg)
+    np.testing.assert_allclose(np.asarray(y1[:, :30]),
+                               np.asarray(y2[:, :30]), atol=1e-5)
+
+
+def test_rglru_scan_matches_sequential():
+    cfg = smoke(get_config("recurrentgemma-9b")).replace(
+        compute_dtype="float32", param_dtype="float32")
+    p = init_recurrent_params(KEY, cfg, jnp.float32)
+    u = 0.3 * jax.random.normal(jax.random.PRNGKey(2), (2, 33, 256))
+    h_scan = rglru_scan(p, u, cfg.rglru.c)
+    a, b = _rglru_gates(p, u, cfg.rglru.c)
+    h = jnp.zeros((2, 256))
+    hs = []
+    for t in range(33):
+        h = a[:, t] * h + b[:, t]
+        hs.append(h)
+    h_seq = jnp.stack(hs, axis=1)
+    np.testing.assert_allclose(np.asarray(h_scan), np.asarray(h_seq),
+                               atol=1e-5)
+
+
+def test_rglru_state_is_contractive():
+    """|a_t| < 1 for all inputs: the recurrence cannot blow up."""
+    cfg = smoke(get_config("recurrentgemma-9b"))
+    p = init_recurrent_params(KEY, cfg, jnp.float32)
+    u = 100.0 * jax.random.normal(KEY, (1, 16, 256))
+    a, b = _rglru_gates(p, u, cfg.rglru.c)
+    # a = exp(-c*softplus(lam)*r) < 1 mathematically; r ~ 0 can round a to
+    # exactly 1.0 in f32, so assert non-expansive + strictly contractive
+    # on average
+    assert float(jnp.max(a)) <= 1.0
+    assert float(jnp.mean(a)) < 1.0
+    assert float(jnp.min(a)) > 0.0
+
+
+def test_hybrid_pattern_structure():
+    cfg = get_config("recurrentgemma-9b")
+    kinds = cfg.layer_kinds()
+    assert len(kinds) == 38
+    assert kinds[:3] == ("recurrent", "recurrent", "local_attn")
+    # 1 attention per 2 recurrent
+    assert kinds.count("local_attn") == 12
+    assert kinds.count("recurrent") == 26
+
+
+def test_moe_every_token_routed_or_dropped_consistently():
+    cfg = smoke(get_config("qwen3-moe-30b-a3b")).replace(
+        compute_dtype="float32", param_dtype="float32")
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    p = init_moe_params(KEY, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 16, cfg.d_model))
+    out, aux = moe_apply(p, x, cfg)
+    assert out.shape == x.shape
+    assert float(aux["moe_drop_frac"]) == 0.0          # high capacity: no drops
+    assert float(aux["moe_aux_loss"]) > 0.0
+    # with tiny capacity, drops must be reported
+    cfg2 = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=0.1))
+    _, aux2 = moe_apply(p, x, cfg2)
+    assert float(aux2["moe_drop_frac"]) > 0.0
+
+
+def test_moe_permutation_equivariance():
+    """Permuting tokens permutes outputs (routing is per-token)."""
+    cfg = smoke(get_config("qwen3-moe-30b-a3b")).replace(
+        compute_dtype="float32", param_dtype="float32")
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    p = init_moe_params(KEY, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 12, cfg.d_model))
+    out, _ = moe_apply(p, x, cfg)
+    perm = jax.random.permutation(jax.random.PRNGKey(5), 12)
+    out_p, _ = moe_apply(p, x[:, perm], cfg)
+    np.testing.assert_allclose(np.asarray(out[:, perm]), np.asarray(out_p),
+                               atol=1e-4)
+
+
+def test_dirty_model_separates_shared_and_private():
+    """Shared support + a few private coefficients: S catches the shared
+    rows; the combined estimate recovers the union support."""
+    data = gen_regression(jax.random.PRNGKey(7), m=6, n=120, p=80, s=5,
+                          signal_low=0.5)
+    B, S, E = dirty_model(data.Xs, data.ys, lam_s=0.4, lam_e=0.2, iters=600)
+    assert B.shape == (80, 6)
+    h = int(hamming(support_of(B, 1e-2), data.support))
+    assert h <= 3

@@ -1,0 +1,100 @@
+"""Hypothesis property tests for the proximal operators (system invariants)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import (
+    group_hard_threshold, group_soft_threshold, project_l1_ball, prox_linf,
+    soft_threshold, support_from_rows,
+)
+
+vec = hnp.arrays(np.float32, hnp.array_shapes(min_dims=1, max_dims=1,
+                                              min_side=1, max_side=64),
+                 elements=st.floats(-100, 100, width=32))
+tau_s = st.floats(0.0, 50.0, width=32)
+
+
+@settings(max_examples=50, deadline=None)
+@given(vec, tau_s)
+def test_soft_threshold_properties(v, tau):
+    out = np.asarray(soft_threshold(jnp.asarray(v), tau))
+    # shrinkage: |out| <= |v|, signs preserved, zero inside the tube
+    assert np.all(np.abs(out) <= np.abs(v) + 1e-5)
+    assert np.all((out == 0) | (np.sign(out) == np.sign(v)))
+    assert np.all(out[np.abs(v) <= tau] == 0)
+    np.testing.assert_allclose(np.abs(out[np.abs(v) > tau]),
+                               np.abs(v[np.abs(v) > tau]) - tau, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=50, deadline=None)
+@given(vec, st.floats(0.0625, 50.0, width=32))
+def test_l1_projection_feasible_and_idempotent(v, r):
+    p = np.asarray(project_l1_ball(jnp.asarray(v), r))
+    # float32 cumsum error grows with ||v||_1; use a magnitude-aware tol
+    tol = 1e-6 * v.size * (r + np.sum(np.abs(v))) + 1e-5
+    assert np.sum(np.abs(p)) <= r + tol
+    p2 = np.asarray(project_l1_ball(jnp.asarray(p), r))
+    np.testing.assert_allclose(p, p2, atol=max(1e-4, tol))
+    # projection of a feasible point is itself
+    if np.sum(np.abs(v)) <= r:
+        np.testing.assert_allclose(p, v, atol=1e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(vec, st.floats(0.0625, 50.0, width=32))
+def test_l1_projection_is_closest_feasible_point(v, r):
+    """Projection must beat naive feasible candidates in distance."""
+    p = np.asarray(project_l1_ball(jnp.asarray(v), r))
+    l1 = np.sum(np.abs(v))
+    if l1 > r:
+        scaled = v * (r / l1)  # a feasible competitor
+        d_proj = np.sum((v - p) ** 2)
+        d_scaled = np.sum((v - scaled) ** 2)
+        assert d_proj <= d_scaled * (1 + 1e-5) + 1e-4
+
+
+@settings(max_examples=50, deadline=None)
+@given(vec, tau_s)
+def test_prox_linf_moreau_identity(v, tau):
+    """prox_{tau||.||_inf}(v) + P_{tau B1}(v) == v (Moreau decomposition)."""
+    jv = jnp.asarray(v)
+    lhs = np.asarray(prox_linf(jv, tau)) + np.asarray(project_l1_ball(jv, tau))
+    np.testing.assert_allclose(lhs, v, atol=1e-4)
+
+
+mat = hnp.arrays(np.float32, st.tuples(st.integers(1, 32), st.integers(1, 8)),
+                 elements=st.floats(-10, 10, width=32).filter(
+                     lambda x: x == 0 or abs(x) > 1e-3))
+
+
+@settings(max_examples=50, deadline=None)
+@given(mat, st.floats(0.0, 20.0, width=32))
+def test_group_soft_threshold_row_norm_shrinkage(B, tau):
+    out = np.asarray(group_soft_threshold(jnp.asarray(B), tau))
+    rn_in = np.linalg.norm(B, axis=-1)
+    rn_out = np.linalg.norm(out, axis=-1)
+    # each row shrunk by exactly tau (or to zero)
+    np.testing.assert_allclose(rn_out, np.maximum(rn_in - tau, 0), rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=50, deadline=None)
+@given(mat, st.floats(0.0, 20.0, width=32))
+def test_group_hard_threshold_keeps_or_kills_rows(B, lam):
+    out = np.asarray(group_hard_threshold(jnp.asarray(B), lam))
+    rn = np.linalg.norm(B.astype(np.float64), axis=-1)
+    clear = np.abs(rn - lam) > 1e-4 * max(lam, 1.0)  # avoid fp boundary ties
+    kept = (rn > lam) & clear
+    killed = (rn <= lam) & clear
+    np.testing.assert_allclose(out[kept], B[kept])
+    assert np.all(out[killed] == 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(mat, st.floats(0.0, 10.0, width=32), st.floats(0.0, 10.0, width=32))
+def test_support_monotone_in_threshold(B, l1, l2):
+    """\\hat S(Lambda) is monotone decreasing in Lambda."""
+    lo, hi = min(l1, l2), max(l1, l2)
+    s_lo = np.asarray(support_from_rows(jnp.asarray(B), lo))
+    s_hi = np.asarray(support_from_rows(jnp.asarray(B), hi))
+    assert np.all(s_hi <= s_lo)
