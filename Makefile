@@ -1,0 +1,22 @@
+PY ?= python
+# src for the repro package, . for the benchmarks package (fig1 imports
+# benchmarks.paper_common)
+export PYTHONPATH := src:.:$(PYTHONPATH)
+
+.PHONY: test test-cpu8 bench-smoke
+
+test:
+	$(PY) -m pytest -q
+
+# sharded DSML / SPMD paths with 8 forced host devices (the in-test
+# subprocess probes force their own device count; this job exercises the
+# same paths directly in-process on CI CPU workers)
+test-cpu8:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	$(PY) -m pytest -q tests/test_distributed.py tests/test_moe_a2a.py \
+	    tests/test_batched_solver.py
+
+bench-smoke:
+	$(PY) benchmarks/kernels_bench.py
+	$(PY) benchmarks/communication.py
+	$(PY) benchmarks/fig1_regression.py --smoke

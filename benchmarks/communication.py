@@ -14,12 +14,9 @@ from __future__ import annotations
 import json
 import os
 import re
-import subprocess
-import sys
 import time
 
-import jax
-import jax.numpy as jnp
+from repro.substrate import run_probe
 
 
 def measured_bytes(m: int = 10, n: int = 50, p: int = 200) -> dict:
@@ -34,34 +31,19 @@ def measured_bytes(m: int = 10, n: int = 50, p: int = 200) -> dict:
     }
 
 
+# Lowers the REAL sharded implementation (not a copy of it) and counts
+# the collectives in its post-SPMD HLO; host-device/env plumbing comes
+# from repro.substrate.run_probe.
 _PROBE = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import sys; sys.path.insert(0, "src")
-import jax, jax.numpy as jnp
+import jax, re
+from repro.substrate import task_mesh
 from repro.core import gen_regression
-from repro.core.dsml import dsml_fit_sharded
-import re
+from repro.core.dsml import dsml_sharded_fn
 
-mesh = jax.make_mesh((8,), ("task",))
+mesh = task_mesh(8)
 data = gen_regression(jax.random.PRNGKey(0), m=8, n=50, p=200, s=10)
-
-from jax import shard_map
-from jax.sharding import PartitionSpec as P
-from repro.core.dsml import _local_work
-from repro.core.prox import support_from_rows
-
-lam, mu, Lam = 0.5, 0.2, 1.0
-def worker(X_blk, y_blk):
-    beta_hat, beta_u = jax.vmap(lambda X, y: _local_work(X, y, lam, mu, 200, 200))(X_blk, y_blk)
-    B_all = jax.lax.all_gather(beta_u, "task", tiled=True)
-    support = support_from_rows(B_all.T, Lam)
-    return beta_u * support[None, :]
-
-fn = shard_map(worker, mesh=mesh, in_specs=(P("task"), P("task")),
-               out_specs=P("task"), check_vma=False)
-lowered = jax.jit(fn).lower(data.Xs, data.ys)
-hlo = lowered.compile().as_text()
+fn = dsml_sharded_fn(0.5, 0.2, 1.0, mesh, lasso_iters=200, debias_iters=200)
+hlo = jax.jit(fn).lower(data.Xs, data.ys).compile().as_text()
 kinds = re.findall(r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\(", hlo)
 print("COLLECTIVES:" + ",".join(kinds))
 """
@@ -69,8 +51,7 @@ print("COLLECTIVES:" + ",".join(kinds))
 
 def verify_one_round() -> dict:
     """Run the 8-device shard_map probe in a subprocess; count collectives."""
-    res = subprocess.run([sys.executable, "-c", _PROBE], capture_output=True,
-                         text=True, cwd=os.getcwd(), timeout=600)
+    res = run_probe(_PROBE, n_devices=8, timeout=600)
     out = res.stdout + res.stderr
     m = re.search(r"COLLECTIVES:(.*)", out)
     kinds = [k for k in (m.group(1).split(",") if m else []) if k]

@@ -3,9 +3,15 @@
 Top row:    m=10 fixed, n varied.
 Bottom row: n=50 fixed, m varied.
 Metrics: Hamming distance, l1/l2 estimation error, prediction error.
+
+The tuned local-lasso baseline inside `eval_regression_methods` runs its
+whole lambda-grid x tasks sweep as one batched sufficient-statistics
+engine call (see core/engine.solve_lasso_grid); `--smoke` shrinks the
+sweep to a single run per point for the CI bench-smoke job.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -18,24 +24,25 @@ from repro.core import gen_regression
 P, S_TRUE = 200, 10
 
 
-def sweep(n_runs: int = 10):
+def sweep(n_runs: int = 10, *, iters: int = 400):
     results = {"vary_n": {}, "vary_m": {}}
     for n in (30, 50, 80, 120):
         results["vary_n"][n] = average_runs(
             lambda key: eval_regression_methods(
-                gen_regression(key, m=10, n=n, p=P, s=S_TRUE)),
+                gen_regression(key, m=10, n=n, p=P, s=S_TRUE), iters=iters),
             n_runs)
     for m in (2, 5, 10, 20):
         results["vary_m"][m] = average_runs(
             lambda key: eval_regression_methods(
-                gen_regression(key, m=m, n=50, p=P, s=S_TRUE)),
+                gen_regression(key, m=m, n=50, p=P, s=S_TRUE), iters=iters),
             n_runs)
     return results
 
 
-def main(n_runs: int = 10, out_dir: str = "experiments/paper"):
+def main(n_runs: int = 10, out_dir: str = "experiments/paper", *,
+         iters: int = 400):
     t0 = time.time()
-    results = sweep(n_runs)
+    results = sweep(n_runs, iters=iters)
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "fig1_regression.json"), "w") as f:
         json.dump(results, f, indent=2)
@@ -53,5 +60,11 @@ def main(n_runs: int = 10, out_dir: str = "experiments/paper"):
 
 
 if __name__ == "__main__":
-    for r in main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=10)
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 run per point with a reduced iteration budget")
+    args = ap.parse_args()
+    n_runs = 1 if args.smoke else args.runs
+    for r in main(n_runs, iters=200 if args.smoke else 400):
         print(r)

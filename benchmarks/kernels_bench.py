@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.group_threshold.ref import group_threshold_ref
-from repro.kernels.ista_step.ref import ista_step_ref
+from repro.kernels.ista_step.ops import ista_step, ista_step_batched
+from repro.kernels.ista_step.ref import ista_step_batched_ref, ista_step_ref
 
 
 def _time(fn, *args, reps=20):
@@ -40,6 +41,32 @@ def main():
     us = _time(f, Sigma, beta, c)
     flops = 2 * p * p * r
     rows.append(f"kernel_ista_step_p{p}_r{r},{us:.0f},flops={flops}")
+
+    # batched lasso hot step (m=16 tasks, p=512): the engine's fused
+    # multi-RHS pallas step vs the per-task vmap path, both in interpret
+    # mode (the TPU BlockSpecs executed on CPU), plus the XLA batched
+    # oracle that the engine uses as its CPU fast path.
+    m = 16
+    p = 512
+    A = jax.random.normal(key, (m, p, p))
+    Sigmas = jnp.einsum("tij,tkj->tik", A, A) / p
+    B = jax.random.normal(jax.random.PRNGKey(1), (m, p, 1))
+    C = jax.random.normal(jax.random.PRNGKey(2), (m, p, 1))
+    etas = jnp.full((m,), 0.01)
+    flops = 2 * m * p * p
+    fused = jax.jit(lambda S, b, c: ista_step_batched(S, b, c, etas, 0.1,
+                                                      interpret=True))
+    vmapped = jax.jit(jax.vmap(
+        lambda S, b, c: ista_step(S, b, c, 0.01, 0.1, interpret=True)))
+    oracle = jax.jit(lambda S, b, c: ista_step_batched_ref(S, b, c, etas, 0.1))
+    us_fused = _time(fused, Sigmas, B, C, reps=3)
+    us_vmap = _time(vmapped, Sigmas, B, C, reps=3)
+    us_ref = _time(oracle, Sigmas, B, C)
+    rows.append(f"kernel_ista_batched_fused_m16_p512,{us_fused:.0f},flops={flops}")
+    rows.append(f"kernel_ista_batched_vmap_m16_p512,{us_vmap:.0f},flops={flops}")
+    rows.append(f"kernel_ista_batched_xla_ref_m16_p512,{us_ref:.0f},flops={flops}")
+    rows.append(f"kernel_ista_batched_fused_over_vmap,{us_fused:.0f},"
+                f"speedup={us_vmap / us_fused:.2f}x")
 
     # group_threshold: p=200000 rows x m=16
     B = jax.random.normal(key, (200_000, 16))

@@ -16,9 +16,11 @@ import jax.numpy as jnp
 from repro.core import (
     dsml_fit, dsml_logistic_fit, estimation_error, gen_classification,
     gen_regression, group_lasso, group_logistic_lasso, hamming, icap,
-    icap_logistic, lasso, logistic_lasso, prediction_error,
-    refit_ols_masked, refit_logistic_masked, support_of, support_from_rows,
+    icap_logistic, logistic_lasso, prediction_error,
+    refit_logistic_masked, refit_ols_masked_stats, sufficient_stats,
+    support_of, support_from_rows,
 )
+from repro.core.engine import solve_lasso_eq2_grid
 
 LAM_GRID = (0.5, 1.0, 2.0, 4.0)          # multiples of sigma*sqrt(log p / n)
 THRESH_QUANTILES = (0.5, 0.7, 0.8, 0.9, 0.95, 0.98)
@@ -51,11 +53,12 @@ def eval_regression_methods(data, *, iters: int = 400) -> Dict[str, dict]:
             "pred_err": float(prediction_error(B_hat, B_true, Sigma)),
         }
 
-    # --- local lasso (per-task, tuned) ---
-    cands = []
-    for c in LAM_GRID:
-        Bl = jax.vmap(lambda X, y: lasso(X, y, c * base * 4, iters=iters))(Xs, ys).T
-        cands.append((Bl, None))
+    # --- local lasso (per-task, tuned): the whole lambda grid x tasks
+    # sweep is ONE batched sufficient-statistics engine call ---
+    Sigmas, cs = sufficient_stats(Xs, ys)
+    lam_grid = jnp.asarray([c * base * 4 for c in LAM_GRID])
+    B_grid = solve_lasso_eq2_grid(Sigmas, cs, lam_grid, iters=iters)
+    cands = [(B_grid[i].T, None) for i in range(len(LAM_GRID))]
     _, B_best, _ = _best_by_hamming(cands, support)
     record("lasso", B_best)
 
@@ -67,7 +70,8 @@ def eval_regression_methods(data, *, iters: int = 400) -> Dict[str, dict]:
     _, B_best, _ = _best_by_hamming(cands, support)
     record("group_lasso", B_best)
     sup = support_of(B_best, 1e-3)
-    B_refit = jax.vmap(lambda X, y: refit_ols_masked(X, y, sup))(Xs, ys).T
+    B_refit = jax.vmap(
+        lambda S, c: refit_ols_masked_stats(S, c, sup))(Sigmas, cs).T
     record("refit_group_lasso", B_refit)
 
     # --- iCAP (tuned) ---
@@ -91,7 +95,8 @@ def eval_regression_methods(data, *, iters: int = 400) -> Dict[str, dict]:
         cands.append((B_hat, sup_hat))
     h, B_best, sup_hat = _best_by_hamming(cands, support)
     record("dsml", B_best)
-    B_refit = jax.vmap(lambda X, y: refit_ols_masked(X, y, sup_hat))(Xs, ys).T
+    B_refit = jax.vmap(
+        lambda S, c: refit_ols_masked_stats(S, c, sup_hat))(Sigmas, cs).T
     record("refit_dsml", B_refit)
     return out
 

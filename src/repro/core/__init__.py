@@ -25,6 +25,16 @@ from repro.core.prox import (
     soft_threshold,
     support_from_rows,
 )
+from repro.core.engine import (
+    debias_batched,
+    inverse_hessian_batched,
+    power_iteration_batched,
+    solve_lasso_batched,
+    solve_lasso_eq2,
+    solve_lasso_eq2_grid,
+    solve_lasso_grid,
+    sufficient_stats,
+)
 from repro.core.solvers import (
     fista,
     group_lasso,
@@ -32,6 +42,7 @@ from repro.core.solvers import (
     lasso,
     power_iteration,
     refit_ols_masked,
+    refit_ols_masked_stats,
 )
 from repro.core.synth import (
     MultiTaskData,
@@ -51,8 +62,11 @@ __all__ = [
     "prediction_error", "support_of",
     "group_hard_threshold", "group_soft_threshold", "project_l1_ball",
     "prox_linf", "soft_threshold", "support_from_rows",
+    "debias_batched", "inverse_hessian_batched", "power_iteration_batched",
+    "solve_lasso_batched", "solve_lasso_eq2", "solve_lasso_eq2_grid",
+    "solve_lasso_grid", "sufficient_stats",
     "fista", "group_lasso", "icap", "lasso", "power_iteration",
-    "refit_ols_masked",
+    "refit_ols_masked", "refit_ols_masked_stats",
     "MultiTaskData", "ar_covariance", "gen_classification",
     "gen_regression", "sample_coefficients",
 ]

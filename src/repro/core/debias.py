@@ -11,8 +11,13 @@ On TPU we solve the *penalized* equivalent for all p rows simultaneously
 
 whose KKT conditions give  ||Sigma_hat m_j - e_j||_inf <= mu  at any
 optimum with active l1 subgradient — i.e. a feasible point of the paper's
-program (see DESIGN.md §2 for the hardware-adaptation note). The identity
-fallback of Javanmard-Montanari (Sigma^-1 feasible) carries over.
+program (see DESIGN.md §2, "Debias M-matrix on the MXU", for the
+hardware-adaptation note). The identity fallback of Javanmard-Montanari
+(Sigma^-1 feasible) carries over.
+
+Both entry points are batch-1 wrappers over the batched
+sufficient-statistics engine (core/engine.py): the M columns solve
+min 1/2 c' Sigma c - c_j + mu|c|_1, i.e. a p-RHS lasso with c = I.
 """
 from __future__ import annotations
 
@@ -21,24 +26,15 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.prox import soft_threshold
-from repro.core.solvers import fista, power_iteration
+from repro.core.engine import (
+    debias_batched, inverse_hessian_batched, sufficient_stats,
+)
 
 
 @partial(jax.jit, static_argnames=("iters",))
 def inverse_hessian_m(Sigma: jnp.ndarray, mu, iters: int = 600) -> jnp.ndarray:
     """Approximate inverse M (p x p, row j ~= m_tj) of a PSD covariance."""
-    p = Sigma.shape[0]
-    L = power_iteration(Sigma)
-    step = 1.0 / jnp.maximum(L, 1e-12)
-
-    # Columns solve  min 1/2 c^T Sigma c - c_j + mu|c|_1 ; Sigma symmetric,
-    # so M = C^T has rows m_j. Warm-start from a scaled identity.
-    C0 = jnp.eye(p, dtype=Sigma.dtype) / jnp.maximum(jnp.diag(Sigma), 1e-12)
-    grad = lambda C: Sigma @ C - jnp.eye(p, dtype=Sigma.dtype)
-    prox = lambda V, s: soft_threshold(V, s * mu)
-    C = fista(grad, prox, C0, step, iters)
-    return C.T
+    return inverse_hessian_batched(Sigma[None], mu, iters=iters)[0]
 
 
 @partial(jax.jit, static_argnames=("iters",))
@@ -50,11 +46,9 @@ def debias_lasso(
     iters: int = 600,
 ) -> jnp.ndarray:
     """Debiased estimator (paper eq. 4): b^u = b + n^-1 M X^T (y - X b)."""
-    n = X.shape[0]
-    Sigma = (X.T @ X) / n
-    M = inverse_hessian_m(Sigma, mu, iters=iters)
-    resid = y - X @ beta_hat
-    return beta_hat + (M @ (X.T @ resid)) / n
+    Sigmas, cs = sufficient_stats(X[None], y[None])
+    M = inverse_hessian_batched(Sigmas, mu, iters=iters)
+    return debias_batched(Sigmas, cs, beta_hat[None], M)[0]
 
 
 def coherence(Sigma: jnp.ndarray, M: jnp.ndarray) -> jnp.ndarray:

@@ -2,14 +2,22 @@
 
 Two implementations of the same algorithm:
 
-  * `dsml_fit`          — single-host reference (vmap over tasks).
+  * `dsml_fit`          — single-host reference.
   * `dsml_fit_sharded`  — SPMD implementation with `shard_map` over a
-    1-D "task" mesh axis. Each device plays the role of one worker
-    (or a group of workers); the ONLY communication is a single
-    `all_gather` of the debiased p-vector per worker — O(p) per device,
-    exactly the paper's one round. The master's group-hard-threshold is
-    computed replicated (identical on every device), which on a TPU mesh
-    is equivalent to (and cheaper than) master + broadcast.
+    1-D "task" mesh axis (resolved portably via `repro.substrate`).
+    Each device plays the role of one worker (or a group of workers);
+    the ONLY communication is a single `all_gather` of the debiased
+    p-vector per worker — O(p) per device, exactly the paper's one
+    round. The master's group-hard-threshold is computed replicated
+    (identical on every device), which on a TPU mesh is equivalent to
+    (and cheaper than) master + broadcast.
+
+Both run steps 1-2 through the batched sufficient-statistics engine
+(core/engine.py): the m local lassos are ONE batched solve, and the m
+debias M-matrix estimations are ONE batched multi-RHS solve — the hot
+loop is the fused Pallas `ista_step_batched` kernel on TPU and a single
+XLA batched matmul elsewhere, instead of a vmap of per-task scalar
+FISTA loops.
 """
 from __future__ import annotations
 
@@ -19,11 +27,16 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
-from repro.core.debias import debias_lasso
+from repro.core.engine import (
+    debias_batched,
+    inverse_hessian_batched,
+    solve_lasso_eq2,
+    sufficient_stats,
+)
 from repro.core.prox import support_from_rows
-from repro.core.solvers import lasso, refit_ols_masked
+from repro.core.solvers import refit_ols_masked_stats
+from repro.substrate import all_gather_tasks, shard_map
 
 
 class DsmlResult(NamedTuple):
@@ -33,11 +46,21 @@ class DsmlResult(NamedTuple):
     beta_local: jnp.ndarray   # (m, p) local lasso estimates (step 1)
 
 
-def _local_work(X, y, lam, mu, lasso_iters, debias_iters):
-    """Steps 1-2 of Algorithm 1: local lasso + debiasing. No communication."""
-    beta_hat = lasso(X, y, lam, iters=lasso_iters)
-    beta_u = debias_lasso(X, y, beta_hat, mu, iters=debias_iters)
+def _local_work_stats(Sigmas, cs, lam, mu, lasso_iters, debias_iters):
+    """Steps 1-2 of Algorithm 1 on sufficient statistics, batched over
+    the m local tasks. No communication."""
+    beta_hat = solve_lasso_eq2(Sigmas, cs, lam, iters=lasso_iters)
+    Ms = inverse_hessian_batched(Sigmas, mu, iters=debias_iters)
+    beta_u = debias_batched(Sigmas, cs, beta_hat, Ms)
     return beta_hat, beta_u
+
+
+def _local_work(X, y, lam, mu, lasso_iters, debias_iters):
+    """Single-task convenience wrapper (kept for probes/examples)."""
+    Sigmas, cs = sufficient_stats(X[None], y[None])
+    beta_hat, beta_u = _local_work_stats(Sigmas, cs, lam, mu,
+                                         lasso_iters, debias_iters)
+    return beta_hat[0], beta_u[0]
 
 
 @partial(jax.jit, static_argnames=("lasso_iters", "debias_iters", "refit"))
@@ -52,15 +75,50 @@ def dsml_fit(
     refit: bool = False,
 ) -> DsmlResult:
     """Single-host reference. Xs: (m, n, p), ys: (m, n)."""
-    beta_hat, beta_u = jax.vmap(
-        lambda X, y: _local_work(X, y, lam, mu, lasso_iters, debias_iters)
-    )(Xs, ys)
+    Sigmas, cs = sufficient_stats(Xs, ys)
+    beta_hat, beta_u = _local_work_stats(Sigmas, cs, lam, mu,
+                                         lasso_iters, debias_iters)
     support = support_from_rows(beta_u.T, Lam)            # master: eq. (5)
     if refit:
-        beta_tilde = jax.vmap(lambda X, y: refit_ols_masked(X, y, support))(Xs, ys)
+        beta_tilde = jax.vmap(
+            lambda S, c: refit_ols_masked_stats(S, c, support))(Sigmas, cs)
     else:
         beta_tilde = beta_u * support[None, :]            # workers: eq. (6)
     return DsmlResult(beta_tilde, beta_u, support, beta_hat)
+
+
+def dsml_sharded_fn(
+    lam,
+    mu,
+    Lam,
+    mesh: Mesh,
+    axis: str = "task",
+    lasso_iters: int = 400,
+    debias_iters: int = 600,
+):
+    """The shard-mapped SPMD worker as a callable (Xs, ys) -> DsmlResult
+    fields. Exposed separately from `dsml_fit_sharded` so probes can
+    `jax.jit(...).lower(...)` the ACTUAL implementation and inspect its
+    collectives."""
+
+    def worker(X_blk, y_blk):
+        # X_blk: (m_local, n, p) — the tasks owned by this device.
+        Sigmas, cs = sufficient_stats(X_blk, y_blk)
+        beta_hat, beta_u = _local_work_stats(Sigmas, cs, lam, mu,
+                                             lasso_iters, debias_iters)
+        # ---- the ONE communication round of Algorithm 1 ----
+        B_all = all_gather_tasks(beta_u, axis)             # (m, p) everywhere
+        # ---- master step, replicated (== master + broadcast) ----
+        support = support_from_rows(B_all.T, Lam)
+        beta_tilde = beta_u * support[None, :]
+        return beta_tilde, beta_u, support, beta_hat
+
+    return shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=(P(axis), P(axis), P(), P(axis)),
+    )
 
 
 def dsml_fit_sharded(
@@ -79,25 +137,7 @@ def dsml_fit_sharded(
     Communication: exactly one `all_gather` of (m_local, p) debiased
     estimates per device — O(p) numbers per worker, the paper's budget.
     """
-
-    def worker(X_blk, y_blk):
-        # X_blk: (m_local, n, p) — the tasks owned by this device.
-        beta_hat, beta_u = jax.vmap(
-            lambda X, y: _local_work(X, y, lam, mu, lasso_iters, debias_iters)
-        )(X_blk, y_blk)
-        # ---- the ONE communication round of Algorithm 1 ----
-        B_all = jax.lax.all_gather(beta_u, axis, tiled=True)   # (m, p) everywhere
-        # ---- master step, replicated (== master + broadcast) ----
-        support = support_from_rows(B_all.T, Lam)
-        beta_tilde = beta_u * support[None, :]
-        return beta_tilde, beta_u, support, beta_hat
-
-    fn = shard_map(
-        worker,
-        mesh=mesh,
-        in_specs=(P(axis), P(axis)),
-        out_specs=(P(axis), P(axis), P(), P(axis)),
-        check_vma=False,
-    )
+    fn = dsml_sharded_fn(lam, mu, Lam, mesh, axis=axis,
+                         lasso_iters=lasso_iters, debias_iters=debias_iters)
     beta_tilde, beta_u, support, beta_hat = jax.jit(fn)(Xs, ys)
     return DsmlResult(beta_tilde, beta_u, support, beta_hat)

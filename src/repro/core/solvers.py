@@ -19,7 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.prox import group_soft_threshold, prox_linf, soft_threshold
+from repro.core.prox import group_soft_threshold, prox_linf
 
 
 class FistaResult(NamedTuple):
@@ -55,18 +55,29 @@ def fista(grad_fn, prox_fn, x0: jnp.ndarray, step, iters: int) -> jnp.ndarray:
     return x
 
 
+def lasso_stats_step_scale(Sigma: jnp.ndarray):
+    """Step size for the eq.-2 lasso in the engine's normalized gradient
+    convention g = Sigma b - c. The objective's gradient is 2(Sigma b - c)
+    with Lipschitz constant 2*lambda_max, so the engine step is
+    2 * 1/max(2*lambda_max, eps) and the engine threshold weight is
+    lam/2 (eta * lam/2 == step * lam of the unnormalized iteration)."""
+    L = 2.0 * power_iteration(Sigma)
+    return 2.0 / jnp.maximum(L, 1e-12)
+
+
 @partial(jax.jit, static_argnames=("iters",))
 def lasso(X: jnp.ndarray, y: jnp.ndarray, lam, iters: int = 400) -> jnp.ndarray:
-    """Local lasso (paper eq. 2). X: (n, p), y: (n,). Returns (p,)."""
+    """Local lasso (paper eq. 2). X: (n, p), y: (n,). Returns (p,).
+
+    Thin wrapper over the batched sufficient-statistics engine
+    (`core/engine.solve_lasso_eq2`) with batch size 1; reproduces the
+    historical FISTA iterates exactly.
+    """
+    from repro.core.engine import solve_lasso_eq2
     n = X.shape[0]
     Sigma = (X.T @ X) / n                       # empirical covariance
     c = (X.T @ y) / n
-    L = 2.0 * power_iteration(Sigma)            # Lipschitz of grad (2/n)X^T(Xb-y)
-    step = 1.0 / jnp.maximum(L, 1e-12)
-
-    grad = lambda b: 2.0 * (Sigma @ b - c)
-    prox = lambda v, s: soft_threshold(v, s * lam)
-    return fista(grad, prox, jnp.zeros(X.shape[1], X.dtype), step, iters)
+    return solve_lasso_eq2(Sigma[None], c[None], lam, iters=iters)[0]
 
 
 @partial(jax.jit, static_argnames=("iters",))
@@ -105,17 +116,24 @@ def icap(Xs: jnp.ndarray, ys: jnp.ndarray, lam, iters: int = 400) -> jnp.ndarray
 
 
 @jax.jit
-def refit_ols_masked(X: jnp.ndarray, y: jnp.ndarray, support: jnp.ndarray) -> jnp.ndarray:
-    """OLS refit restricted to `support` (bool (p,)), jit-safe via masking.
+def refit_ols_masked_stats(S: jnp.ndarray, c: jnp.ndarray,
+                           support: jnp.ndarray) -> jnp.ndarray:
+    """OLS refit on sufficient statistics (S = X'X/n, c = X'y/n),
+    restricted to `support` (bool (p,)), jit-safe via masking.
 
     Solves the masked normal equations:
-        (D S D + (I - D)) b = D X^T y / n,   D = diag(support)
+        (D S D + (I - D)) b = D c,   D = diag(support)
     which equals OLS on the support columns and 0 elsewhere.
     """
-    n, p = X.shape
-    d = support.astype(X.dtype)
-    S = (X.T @ X) / n
-    c = (X.T @ y) / n
+    p = S.shape[-1]
+    d = support.astype(S.dtype)
     A = d[:, None] * S * d[None, :] + jnp.diag(1.0 - d)
-    A = A + 1e-8 * jnp.eye(p, dtype=X.dtype)
+    A = A + 1e-8 * jnp.eye(p, dtype=S.dtype)
     return jnp.linalg.solve(A, d * c)
+
+
+@jax.jit
+def refit_ols_masked(X: jnp.ndarray, y: jnp.ndarray, support: jnp.ndarray) -> jnp.ndarray:
+    """OLS refit restricted to `support` from raw samples."""
+    n = X.shape[0]
+    return refit_ols_masked_stats((X.T @ X) / n, (X.T @ y) / n, support)

@@ -6,6 +6,10 @@ each (i, j) output tile accumulates Sigma[i, :] @ beta[:, j] over k-tiles
 on the MXU, then the epilogue (gradient step + soft threshold, VPU ops)
 fires on the last k step. Tiles default to 128 (MXU-aligned); the scalars
 (eta, lam) ride in SMEM.
+
+`ista_step_batched_pallas` extends the same tiling with a leading task
+grid dimension: all m per-task solves of the DSML hot loop run as one
+pallas call over per-task Sigma tiles and per-task step sizes (SMEM).
 """
 from __future__ import annotations
 
@@ -37,6 +41,72 @@ def _ista_kernel(eta_lam_ref, sig_ref, beta_ref, beta_tile_ref, c_ref,
         tau = eta * lam
         out = jnp.sign(z) * jnp.maximum(jnp.abs(z) - tau, 0.0)
         out_ref[...] = out.astype(out_ref.dtype)
+
+
+def _ista_batched_kernel(eta_lam_ref, sig_ref, beta_ref, beta_tile_ref,
+                         c_ref, out_ref, acc_ref, *, nk: int, m: int):
+    t = pl.program_id(0)
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(sig_ref[0], beta_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        eta = eta_lam_ref[t]            # per-task step size
+        lam = eta_lam_ref[m + t]        # per-task regularization weight
+        grad = acc_ref[...] - c_ref[0].astype(jnp.float32)
+        z = beta_tile_ref[0].astype(jnp.float32) - eta * grad
+        tau = eta * lam
+        out = jnp.sign(z) * jnp.maximum(jnp.abs(z) - tau, 0.0)
+        out_ref[0] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bp", "br", "bk", "interpret"))
+def ista_step_batched_pallas(Sigmas, betas, cs, etas, lam, *, bp: int = 128,
+                             br: int = 128, bk: int = 128,
+                             interpret: bool = False):
+    """Batched fused ISTA step over m independent tasks in ONE pallas call.
+
+    Sigmas: (m, p, p), betas/cs: (m, p, r), etas: (m,) per-task step
+    sizes, lam scalar or per-task (m,) regularization weights. The task
+    index is the outermost grid dimension, so every task's (i, j, k)
+    tile sweep reuses the same VMEM accumulator layout as the
+    single-task kernel — the MXU sees one long stream of
+    (bp, bk) x (bk, br) tiles instead of m separate dispatches.
+    """
+    m, p, r = betas.shape
+    bp = min(bp, p)
+    br = min(br, r)
+    bk = min(bk, p)
+    assert p % bp == 0 and r % br == 0 and p % bk == 0, (m, p, r, bp, br, bk)
+    ni, nj, nk = p // bp, r // br, p // bk
+
+    eta_lam = jnp.concatenate(
+        [etas.astype(jnp.float32).reshape(m),
+         jnp.broadcast_to(jnp.asarray(lam, jnp.float32).reshape(-1),
+                          (m,))])
+
+    return pl.pallas_call(
+        functools.partial(_ista_batched_kernel, nk=nk, m=m),
+        grid=(m, ni, nj, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),        # etas ++ [lam]
+            pl.BlockSpec((1, bp, bk), lambda t, i, j, k: (t, i, k)),
+            pl.BlockSpec((1, bk, br), lambda t, i, j, k: (t, k, j)),
+            pl.BlockSpec((1, bp, br), lambda t, i, j, k: (t, i, j)),
+            pl.BlockSpec((1, bp, br), lambda t, i, j, k: (t, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bp, br), lambda t, i, j, k: (t, i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, p, r), betas.dtype),
+        scratch_shapes=[pltpu.VMEM((bp, br), jnp.float32)],
+        interpret=interpret,
+    )(eta_lam, Sigmas, betas, betas, cs)
 
 
 @functools.partial(jax.jit,

@@ -13,12 +13,47 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ista_step.kernel import ista_step_pallas
-from repro.kernels.ista_step.ref import ista_step_ref
+from repro.kernels.ista_step.kernel import (
+    ista_step_batched_pallas, ista_step_pallas,
+)
+from repro.kernels.ista_step.ref import ista_step_batched_ref, ista_step_ref
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _fit_block(size: int, block: int) -> int:
+    b = min(block, size)
+    while size % b:
+        b //= 2
+    return b
+
+
+def ista_step_batched(Sigmas, betas, cs, etas, lam, *, block: int = 128,
+                      interpret: bool | None = None):
+    """One fused ISTA step for m tasks. Sigmas (m, p, p); betas, cs
+    (m, p) or (m, p, r); etas (m,) per-task step sizes; lam scalar or
+    per-task (m,).
+
+    Routes to the batched pallas kernel on MXU-friendly shapes (ragged
+    shapes fall back to the batched jnp oracle); `interpret` defaults to
+    True off-TPU so the same BlockSpecs execute everywhere.
+    """
+    squeeze = betas.ndim == 2
+    if squeeze:
+        betas = betas[..., None]
+        cs = cs[..., None]
+    m, p, r = betas.shape
+    interp = (not _on_tpu()) if interpret is None else interpret
+    if p % 8 or (r % 8 and r != 1):
+        out = ista_step_batched_ref(Sigmas, betas, cs, etas, lam)
+    else:
+        bp = _fit_block(p, block)
+        br = _fit_block(r, block)
+        out = ista_step_batched_pallas(Sigmas, betas, cs, etas, lam,
+                                       bp=bp, br=br, bk=bp, interpret=interp)
+    return out[..., 0] if squeeze else out
 
 
 def ista_step(Sigma, beta, c, eta, lam, *, block: int = 128,
@@ -33,12 +68,8 @@ def ista_step(Sigma, beta, c, eta, lam, *, block: int = 128,
     if p % 8 or (r % 8 and r != 1):
         out = ista_step_ref(Sigma, beta, c, eta, lam)   # ragged fallback
     else:
-        bp = min(block, p)
-        br = min(block, r)
-        while p % bp:
-            bp //= 2
-        while r % br:
-            br //= 2
+        bp = _fit_block(p, block)
+        br = _fit_block(r, block)
         out = ista_step_pallas(Sigma, beta, c, eta, lam, bp=bp, br=br,
                                bk=bp, interpret=interp)
     return out[:, 0] if squeeze else out

@@ -20,3 +20,19 @@ def ista_step_ref(Sigma: jnp.ndarray, beta: jnp.ndarray, c: jnp.ndarray,
     z = beta - eta * grad
     tau = eta * lam
     return jnp.sign(z) * jnp.maximum(jnp.abs(z) - tau, 0.0)
+
+
+def ista_step_batched_ref(Sigmas: jnp.ndarray, betas: jnp.ndarray,
+                          cs: jnp.ndarray, etas: jnp.ndarray,
+                          lam) -> jnp.ndarray:
+    """Batched oracle: Sigmas (m, p, p), betas/cs (m, p, r), etas (m,),
+    lam scalar or per-task (m,).
+
+    One XLA batched matmul for all m tasks — also the fast CPU path of
+    the engine (core/engine.py), where pallas runs in interpret mode.
+    """
+    grad = jnp.einsum("tij,tjr->tir", Sigmas, betas) - cs
+    eta = etas.reshape(-1, 1, 1).astype(betas.dtype)
+    z = betas - eta * grad
+    tau = eta * jnp.asarray(lam, betas.dtype).reshape(-1, 1, 1)
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - tau, 0.0)

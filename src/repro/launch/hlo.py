@@ -139,8 +139,15 @@ def collective_bytes(hlo: str, default_trip: int = 1) -> dict:
     return dict(per_kind)
 
 
+# The lhs operand of a dot may appear bare (`dot(%a, %b)`) or typed
+# (`dot(f32[64,64]{1,0} %a, ...)`) depending on the XLA text vintage;
+# dots also sit inside fusion computations called from a scan's while
+# body, whose FLOPs must scale by the trip count (the computation
+# multiplier below follows `calls=` edges, so each fusion inherits its
+# caller's while multiplier).
 _DOT_RE = re.compile(
-    r"%?([\w\.\-]+) = (\w+)\[([\d,]*)\][^=]*dot\(%?([\w\.\-]+),")
+    r"%?([\w\.\-]+) = (\w+)\[([\d,]*)\][^=]*"
+    r"dot\((?:\w+\[[\d,]*\](?:\{[^}]*\})?\s+)?%?([\w\.\-]+)")
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+) = (\w+)\[([\d,]*)\]")
 _OPERAND_RE = re.compile(r"%([\w\.\-]+)")

@@ -25,8 +25,9 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.substrate import all_to_all_experts, shard_map
 
 from repro.models.config import ModelConfig
 from repro.models.moe import _expert_ffn
@@ -80,8 +81,8 @@ def moe_apply_a2a(p: dict, x: jnp.ndarray, cfg: ModelConfig, mesh: Mesh,
         send, idx, wgt, valid, probs = _local_pack(xf, logits, E, K, C, cdt)
 
         # ---- the explicit communication: one a2a out, one a2a back ----
-        recv = jax.lax.all_to_all(send.reshape(n_ep, E // n_ep, C, d),
-                                  ep_axis, 0, 0, tiled=False)
+        recv = all_to_all_experts(send.reshape(n_ep, E // n_ep, C, d),
+                                  ep_axis)
         # recv: (n_ep, E_loc, C, d) — tokens from every source device for
         # the experts resident here
         E_loc = E // n_ep
@@ -89,7 +90,7 @@ def moe_apply_a2a(p: dict, x: jnp.ndarray, cfg: ModelConfig, mesh: Mesh,
                          recv.transpose(1, 0, 2, 3).reshape(E_loc, n_ep * C, d),
                          cfg.mlp_act)
         back = ye.reshape(E_loc, n_ep, C, d).transpose(1, 0, 2, 3)
-        ret = jax.lax.all_to_all(back, ep_axis, 0, 0, tiled=False)
+        ret = all_to_all_experts(back, ep_axis)
         ret = ret.reshape(E, C, d)                     # this device's slots
 
         contrib = ret * (wgt * valid)[..., None].astype(cdt)
@@ -107,8 +108,7 @@ def moe_apply_a2a(p: dict, x: jnp.ndarray, cfg: ModelConfig, mesh: Mesh,
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(dp_axis, None, None), P(), expert_specs),
-        out_specs=(P(dp_axis, None, None), P()),
-        check_vma=False)
+        out_specs=(P(dp_axis, None, None), P()))
     out, aux = fn(x, p["router"], p["experts"])
     if mc.n_shared:
         from repro.models.mlp import mlp_apply

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dsml import DsmlResult, dsml_fit, dsml_fit_sharded
+from repro.core.engine import solve_lasso_eq2_grid, sufficient_stats
 from repro.models import Batch, forward_features
 from repro.models.config import ModelConfig
 
@@ -84,6 +85,20 @@ def probe_predict(res: DsmlResult, features: jnp.ndarray) -> jnp.ndarray:
     """features: (m, n, d) -> predictions (m, n)."""
     X = standardize(features)
     return jnp.einsum("tnd,td->tn", X, res.beta_tilde)
+
+
+def lasso_probe_sweep(data: ProbeData, lams: jnp.ndarray, *,
+                      iters: int = 400) -> jnp.ndarray:
+    """Per-task lasso heads for a whole grid of lambdas at once.
+
+    Computes sufficient statistics once, then solves the |lams| x m
+    problems as ONE batched engine call (Sigmas tiled across the grid) —
+    the tuning sweep the per-task-loop baseline pays |lams| solver runs
+    for. Returns (len(lams), m, d).
+    """
+    X = standardize(data.features)
+    Sigmas, cs = sufficient_stats(X, data.targets)
+    return solve_lasso_eq2_grid(Sigmas, cs, lams, iters=iters)
 
 
 def synthetic_probe_tasks(key, params, cfg: ModelConfig, *, m: int = 4,

@@ -1,0 +1,21 @@
+"""Thin collective helpers used inside shard_map bodies.
+
+These exist so algorithm code states *what* it communicates (gather the
+per-task rows, one round) rather than which jax.lax spelling this
+version supports.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def all_gather_tasks(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Gather shards along mesh `axis`, concatenated on dim 0 (tiled)."""
+    return jax.lax.all_gather(x, axis, tiled=True)
+
+
+def all_to_all_experts(x: jnp.ndarray, axis: str, *, split_axis: int = 0,
+                       concat_axis: int = 0) -> jnp.ndarray:
+    """all_to_all over mesh `axis` (MoE dispatch/return)."""
+    return jax.lax.all_to_all(x, axis, split_axis, concat_axis, tiled=False)

@@ -1,0 +1,75 @@
+"""Version-portable jax distributed API resolution.
+
+jax has moved `shard_map` twice (`jax.experimental.shard_map` ->
+`jax.shard_map`) and renamed its replication-check kwarg
+(`check_rep` -> `check_vma`); the ambient-mesh context manager has
+likewise wandered (`Mesh.__enter__` -> `jax.sharding.use_mesh` ->
+`jax.set_mesh`). Every caller in this repo goes through the resolvers
+here instead of hard-coding one vintage of the API.
+
+Nothing in this module touches jax device state at import time, so it is
+safe to import before `force_host_device_count` (see `hostenv.py`).
+"""
+from __future__ import annotations
+
+import contextlib
+import inspect
+from typing import Any, Callable
+
+import jax
+
+
+def _resolve_shard_map() -> Callable[..., Any]:
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    from jax.experimental.shard_map import shard_map as sm  # jax <= 0.5
+    return sm
+
+
+_RAW_SHARD_MAP = _resolve_shard_map()
+# name of the replication-check kwarg on the installed jax, if any
+_CHECK_KW = next(
+    (kw for kw in ("check_vma", "check_rep")
+     if kw in inspect.signature(_RAW_SHARD_MAP).parameters),
+    None,
+)
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs, check: bool = False):
+    """`jax.shard_map` with the replication check spelled portably.
+
+    `check=False` maps to `check_vma=False` on new jax and
+    `check_rep=False` on 0.4.x/0.5.x; the kwarg is omitted entirely on a
+    jax that dropped it.
+    """
+    kwargs = {_CHECK_KW: check} if _CHECK_KW is not None else {}
+    return _RAW_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kwargs)
+
+
+def make_mesh(shape, axis_names):
+    """`jax.make_mesh` where available, mesh_utils otherwise."""
+    mk = getattr(jax, "make_mesh", None)
+    if mk is not None:
+        return mk(tuple(shape), tuple(axis_names))
+    from jax.experimental import mesh_utils
+    devices = mesh_utils.create_device_mesh(tuple(shape))
+    return jax.sharding.Mesh(devices, tuple(axis_names))
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Ambient-mesh context manager across jax versions.
+
+    Prefers `jax.set_mesh` / `jax.sharding.use_mesh`; falls back to the
+    legacy `with mesh:` block on 0.4.x.
+    """
+    setter = getattr(jax, "set_mesh", None) or \
+        getattr(jax.sharding, "use_mesh", None)
+    if setter is not None:
+        with setter(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh

@@ -1,0 +1,66 @@
+"""Host-platform device-count setup (CPU SPMD testing).
+
+The `--xla_force_host_platform_device_count=N` flag must reach XLA
+before the backend initializes; previously every test/benchmark probe
+re-spelled the `os.environ["XLA_FLAGS"]` incantation by hand. The
+helpers here centralize it, both for the current process (call before
+the first device query) and for subprocess environments.
+
+This module deliberately does not import jax at module scope beyond the
+lazy check in `force_host_device_count`.
+"""
+from __future__ import annotations
+
+import os
+from typing import Mapping, MutableMapping
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _merge_xla_flags(existing: str, n: int) -> str:
+    flags = [f for f in existing.split() if not f.startswith(_FLAG + "=")]
+    flags.append(f"{_FLAG}={n}")
+    return " ".join(flags)
+
+
+def force_host_device_count(n: int, env: MutableMapping[str, str] | None = None) -> None:
+    """Set XLA_FLAGS so the host platform exposes `n` devices.
+
+    With `env=None` this mutates `os.environ` for the current process;
+    it must run before jax initializes a backend (raises if too late and
+    the count would change).
+    """
+    target = os.environ if env is None else env
+    target["XLA_FLAGS"] = _merge_xla_flags(target.get("XLA_FLAGS", ""), n)
+    if env is None:
+        # Best-effort too-late detection. The only "is the backend up"
+        # probe is private (and has moved before), so degrade to a
+        # silent no-check on jax versions where it is absent rather
+        # than break the very compat layer this module belongs to.
+        try:
+            from jax._src import xla_bridge
+            initialized = xla_bridge.backends_are_initialized()
+        except Exception:
+            return
+        if initialized:
+            import jax
+            if jax.device_count() != n:
+                raise RuntimeError(
+                    f"jax backend already initialized with "
+                    f"{jax.device_count()} devices; "
+                    f"force_host_device_count({n}) must run first")
+
+
+def host_device_env(n: int, extra_pythonpath: str | None = None,
+                    base: Mapping[str, str] | None = None) -> dict:
+    """Environment dict for a subprocess that needs `n` host devices.
+
+    Merges XLA_FLAGS into a copy of `base` (default: os.environ) and
+    optionally prepends `extra_pythonpath` to PYTHONPATH.
+    """
+    env = dict(os.environ if base is None else base)
+    force_host_device_count(n, env)
+    if extra_pythonpath:
+        prev = env.get("PYTHONPATH", "")
+        env["PYTHONPATH"] = extra_pythonpath + (os.pathsep + prev if prev else "")
+    return env

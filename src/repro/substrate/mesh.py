@@ -1,0 +1,18 @@
+"""Mesh construction helpers for the task-parallel DSML layer."""
+from __future__ import annotations
+
+import jax
+
+from repro.substrate.compat import make_mesh
+
+
+def task_mesh(n_tasks: int | None = None, axis: str = "task"):
+    """1-D mesh over `n_tasks` devices (default: all local devices)."""
+    n = len(jax.devices()) if n_tasks is None else n_tasks
+    return make_mesh((n,), (axis,))
+
+
+def data_model_mesh(model_axis: int = 1):
+    """2-D (data, model) mesh over whatever devices exist."""
+    n = len(jax.devices())
+    return make_mesh((n // model_axis, model_axis), ("data", "model"))

@@ -1,0 +1,31 @@
+"""Subprocess probe runner for multi-device CPU tests and benchmarks.
+
+Several tests/benchmarks verify SPMD properties (collective counts,
+8-device numerical equality) in a fresh process so the parent keeps its
+single-CPU jax runtime. They all need the same boilerplate — XLA_FLAGS
+before jax init, `src` on PYTHONPATH, a timeout — which used to be
+copy-pasted into every probe string. `run_probe` owns it.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+from repro.substrate.hostenv import host_device_env
+
+# repo root = parent of the `src` directory this package lives in
+_SRC = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+REPO_ROOT = os.path.dirname(_SRC)
+
+
+def run_probe(payload: str, *, n_devices: int = 8, timeout: int = 900,
+              cwd: str | None = None) -> subprocess.CompletedProcess:
+    """Run `payload` (python source) in a subprocess with `n_devices`
+    forced host devices and `src` importable. Returns the completed
+    process (check `returncode` / parse `stdout` yourself)."""
+    env = host_device_env(n_devices, extra_pythonpath=_SRC)
+    return subprocess.run([sys.executable, "-c", payload],
+                          capture_output=True, text=True,
+                          cwd=cwd or REPO_ROOT, timeout=timeout, env=env)

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dep (pip install .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.attention_core import flash_attention

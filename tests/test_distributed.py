@@ -7,7 +7,6 @@ the main test session keeps its single-CPU jax runtime.
 """
 import os
 import re
-import subprocess
 import sys
 
 import jax
@@ -15,8 +14,7 @@ import numpy as np
 import pytest
 
 from repro.core import dsml_fit, dsml_fit_sharded, gen_regression
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from repro.substrate import REPO_ROOT as REPO, run_probe
 
 
 def test_sharded_matches_reference_single_device():
@@ -35,13 +33,11 @@ def test_sharded_matches_reference_single_device():
 
 
 _MULTIDEV = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import sys; sys.path.insert(0, "src")
-import jax, numpy as np, re
+import jax, numpy as np
 from repro.core import dsml_fit, dsml_fit_sharded, gen_regression
+from repro.substrate import task_mesh
 
-mesh = jax.make_mesh((8,), ("task",))
+mesh = task_mesh(8)
 data = gen_regression(jax.random.PRNGKey(1), m=8, n=60, p=100, s=5)
 lam, mu, Lam = 0.4, 0.2, 1.0
 ref = dsml_fit(data.Xs, data.ys, lam, mu, Lam, lasso_iters=200,
@@ -56,9 +52,7 @@ print(f"RESULT err={err} sup_eq={sup_eq}")
 
 
 def test_sharded_matches_reference_eight_devices():
-    res = subprocess.run([sys.executable, "-c", _MULTIDEV],
-                         capture_output=True, text=True, cwd=REPO,
-                         timeout=900)
+    res = run_probe(_MULTIDEV, n_devices=8, timeout=900)
     assert res.returncode == 0, res.stderr[-2000:]
     m = re.search(r"RESULT err=([\d.e+-]+) sup_eq=(\w+)", res.stdout)
     assert m, res.stdout

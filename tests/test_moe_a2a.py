@@ -2,30 +2,25 @@
 
 Runs in a subprocess with 8 host devices (2 data x 4 expert-parallel).
 """
-import os
 import re
-import subprocess
-import sys
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from repro.substrate import run_probe
 
 _PROBE = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import sys; sys.path.insert(0, "src")
 import dataclasses, jax, jax.numpy as jnp
 from repro.configs import get_config, smoke
 from repro.models.moe import init_moe_params, moe_apply
 from repro.models.moe_shard_map import moe_apply_a2a
+from repro.substrate import data_model_mesh, use_mesh
 
-mesh = jax.make_mesh((2, 4), ("data", "model"))
+mesh = data_model_mesh(4)            # 8 host devices -> (2 data, 4 model)
 cfg = smoke(get_config("qwen3-moe-30b-a3b")).replace(
     compute_dtype="float32", param_dtype="float32")
 cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
 p = init_moe_params(jax.random.PRNGKey(0), cfg, jnp.float32)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
 ref, _ = moe_apply(p, x, cfg)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     out, _ = jax.jit(lambda p, x: moe_apply_a2a(p, x, cfg, mesh))(p, x)
 err = float(jnp.max(jnp.abs(out - ref)))
 # communication structure: exactly two all-to-alls, no all-reduce of tokens
@@ -37,9 +32,7 @@ print(f"RESULT err={err} n_a2a={n_a2a}")
 
 
 def test_a2a_moe_matches_reference_and_uses_all_to_all():
-    res = subprocess.run([sys.executable, "-c", _PROBE],
-                         capture_output=True, text=True, cwd=REPO,
-                         timeout=900)
+    res = run_probe(_PROBE, n_devices=8, timeout=900)
     assert res.returncode == 0, res.stderr[-2000:]
     m = re.search(r"RESULT err=([\d.e+-]+) n_a2a=(\d+)", res.stdout)
     assert m, res.stdout

@@ -1,6 +1,9 @@
 """Hypothesis property tests for the proximal operators (system invariants)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dep (pip install .[test])")
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 
