@@ -3,7 +3,7 @@ PY ?= python
 # benchmarks.paper_common)
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
-.PHONY: test test-cpu8 bench-smoke
+.PHONY: test test-cpu8 bench-smoke bench-stream-smoke smoke-examples
 
 test:
 	$(PY) -m pytest -q
@@ -14,9 +14,21 @@ test:
 test-cpu8:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	$(PY) -m pytest -q tests/test_distributed.py tests/test_moe_a2a.py \
-	    tests/test_batched_solver.py
+	    tests/test_batched_solver.py tests/test_stream.py
 
 bench-smoke:
 	$(PY) benchmarks/kernels_bench.py
 	$(PY) benchmarks/communication.py
 	$(PY) benchmarks/fig1_regression.py --smoke
+
+# streaming subsystem: ingest throughput + warm-vs-cold refit, with the
+# sharded data x task accumulator exercised on 8 forced host devices
+bench-stream-smoke:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	$(PY) benchmarks/stream_bench.py --smoke
+
+smoke-examples:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	$(PY) examples/stream_online.py --smoke
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	$(PY) examples/quickstart.py

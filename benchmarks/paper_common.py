@@ -30,6 +30,21 @@ def _base_lam(n: int, p: int, sigma: float = 1.0) -> float:
     return float(sigma * jnp.sqrt(jnp.log(float(p)) / n))
 
 
+def time_fn(fn: Callable, *args, reps: int = 10) -> float:
+    """Mean wall time of `fn(*args)` in microseconds.
+
+    The warm-up call is synced before timing starts so compile time
+    never leaks into the first rep. Shared by the kernel and streaming
+    microbenchmarks.
+    """
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
 def _best_by_hamming(candidates, support_true):
     best = None
     for B_hat, extra in candidates:

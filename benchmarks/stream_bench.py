@@ -1,0 +1,93 @@
+"""Streaming DSML benchmarks: ingest throughput and warm vs cold refit.
+
+Ingest is the always-on cost (one rank-n update per chunk: O(m n p^2)
+FLOPs, no solver); refit is the occasional cost. Warm-started refits
+matter because consecutive refits see nearly identical statistics —
+the bench finds the smallest warm iteration budget that matches the
+cold solve's accuracy against a high-iteration reference, then times
+both. With >1 device (e.g. `make bench-stream-smoke` forcing 8 host
+devices) the SPMD data x task accumulator is timed as well.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.paper_common import time_fn as _time
+from repro.core import gen_regression
+from repro.stream import ingest, init_stream_state, refit
+from repro.stream.accumulate import ingest_sharded
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small CI sizes")
+    args = ap.parse_args(argv)
+    m, p, n_chunk = (4, 64, 256) if args.smoke else (8, 256, 1024)
+    cold_iters = 200 if args.smoke else 400
+    rows = []
+
+    data = gen_regression(jax.random.PRNGKey(0), m=m, n=4 * n_chunk, p=p,
+                          s=max(p // 20, 3))
+    chunks = list(zip(jnp.split(data.Xs, 4, axis=1),
+                      jnp.split(data.ys, 4, axis=1)))
+    lam, mu, Lam = 0.4, 0.2, 1.0
+
+    # -- ingest throughput -------------------------------------------------
+    state = init_stream_state(m, p)
+    us = _time(ingest, state, *chunks[0])
+    rows.append(f"stream_ingest_m{m}_n{n_chunk}_p{p},{us:.0f},"
+                f"rows_per_s={m * n_chunk / (us * 1e-6):.0f}")
+
+    if jax.device_count() > 1:
+        from repro.substrate import data_task_mesh
+        mesh = data_task_mesh(n_task=2)
+        f = lambda s, X, y: ingest_sharded(s, X, y, mesh)
+        us = _time(f, state, *chunks[0])
+        rows.append(f"stream_ingest_sharded_{dict(mesh.shape)},{us:.0f},"
+                    f"rows_per_s={m * n_chunk / (us * 1e-6):.0f}")
+
+    # -- warm vs cold refit ------------------------------------------------
+    # state after 3 chunks, refitted (the "previous" model), plus one more
+    # chunk of drifted statistics — the steady-state refit situation.
+    for Xc, yc in chunks[:3]:
+        state = ingest(state, Xc, yc)
+    state, _ = refit(state, lam, mu, Lam, lasso_iters=cold_iters,
+                     debias_iters=cold_iters)
+    state = ingest(state, *chunks[3])
+
+    ref, _ = refit(state, lam, mu, Lam, lasso_iters=5 * cold_iters,
+                   debias_iters=5 * cold_iters)
+    cold, _ = refit(state, lam, mu, Lam, lasso_iters=cold_iters,
+                    debias_iters=cold_iters, warm=False)
+    err_cold = float(jnp.max(jnp.abs(cold.beta_tilde - ref.beta_tilde)))
+
+    warm_iters = cold_iters
+    for k in (cold_iters // 16, cold_iters // 8, cold_iters // 4,
+              cold_iters // 2):
+        warm, _ = refit(state, lam, mu, Lam, lasso_iters=k,
+                        debias_iters=k, warm=True)
+        err = float(jnp.max(jnp.abs(warm.beta_tilde - ref.beta_tilde)))
+        if err <= max(err_cold, 1e-6):
+            warm_iters = k
+            break
+
+    reps = 10 if args.smoke else 3
+    t_cold = _time(lambda s: refit(s, lam, mu, Lam, lasso_iters=cold_iters,
+                                   debias_iters=cold_iters, warm=False),
+                   state, reps=reps)
+    t_warm = _time(lambda s: refit(s, lam, mu, Lam, lasso_iters=warm_iters,
+                                   debias_iters=warm_iters, warm=True),
+                   state, reps=reps)
+    rows.append(f"stream_refit_cold_iters{cold_iters},{t_cold:.0f},"
+                f"err={err_cold:.2e}")
+    rows.append(f"stream_refit_warm_iters{warm_iters},{t_warm:.0f},"
+                f"speedup={t_cold / t_warm:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

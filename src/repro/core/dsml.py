@@ -31,6 +31,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.engine import (
     debias_batched,
     inverse_hessian_batched,
+    power_iteration_batched,
     solve_lasso_eq2,
     sufficient_stats,
 )
@@ -48,19 +49,15 @@ class DsmlResult(NamedTuple):
 
 def _local_work_stats(Sigmas, cs, lam, mu, lasso_iters, debias_iters):
     """Steps 1-2 of Algorithm 1 on sufficient statistics, batched over
-    the m local tasks. No communication."""
-    beta_hat = solve_lasso_eq2(Sigmas, cs, lam, iters=lasso_iters)
-    Ms = inverse_hessian_batched(Sigmas, mu, iters=debias_iters)
+    the m local tasks. No communication. One shared power iteration
+    feeds both solves' step sizes."""
+    lam_max = power_iteration_batched(Sigmas)
+    beta_hat = solve_lasso_eq2(Sigmas, cs, lam, iters=lasso_iters,
+                               lam_max=lam_max)
+    Ms = inverse_hessian_batched(Sigmas, mu, iters=debias_iters,
+                                 lam_max=lam_max)
     beta_u = debias_batched(Sigmas, cs, beta_hat, Ms)
     return beta_hat, beta_u
-
-
-def _local_work(X, y, lam, mu, lasso_iters, debias_iters):
-    """Single-task convenience wrapper (kept for probes/examples)."""
-    Sigmas, cs = sufficient_stats(X[None], y[None])
-    beta_hat, beta_u = _local_work_stats(Sigmas, cs, lam, mu,
-                                         lasso_iters, debias_iters)
-    return beta_hat[0], beta_u[0]
 
 
 @partial(jax.jit, static_argnames=("lasso_iters", "debias_iters", "refit"))

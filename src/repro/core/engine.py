@@ -39,17 +39,24 @@ def power_iteration_batched(Sigmas: jnp.ndarray, iters: int = 64) -> jnp.ndarray
 
 
 @jax.jit
-def sufficient_stats(Xs: jnp.ndarray, ys: jnp.ndarray
+def sufficient_stats(Xs: jnp.ndarray, ys: jnp.ndarray,
+                     weights: jnp.ndarray | None = None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-task empirical covariance and correlation.
 
     Xs: (m, n, p), ys: (m, n) -> Sigmas (m, p, p), cs (m, p). These two
     arrays are ALL the data any downstream solve touches; raw (X, y)
     never re-enters the hot loop.
+
+    `weights` (m, n) are optional per-sample weights, still normalized
+    by n: Sigma_w = n^-1 X' W X, c_w = n^-1 X' W y. This is the one code
+    path behind both the logistic debias Hessian (W = sigma(z)sigma(-z))
+    and the streaming layer's per-sample importance weighting.
     """
     n = Xs.shape[1]
-    Sigmas = jnp.einsum("tni,tnj->tij", Xs, Xs) / n
-    cs = jnp.einsum("tni,tn->ti", Xs, ys) / n
+    Xl = Xs if weights is None else Xs * weights[..., None]
+    Sigmas = jnp.einsum("tni,tnj->tij", Xl, Xs) / n
+    cs = jnp.einsum("tni,tn->ti", Xl, ys) / n
     return Sigmas, cs
 
 
@@ -88,8 +95,11 @@ def solve_lasso_batched(Sigmas: jnp.ndarray, cs: jnp.ndarray, lam, *,
     else:
         step = lambda Z: ista_step_batched_ref(Sigmas, Z, C, etas, lam)
 
-    X0 = jnp.zeros_like(C) if beta0 is None else \
-        jnp.broadcast_to(beta0, C.shape).astype(C.dtype)
+    if beta0 is None:
+        X0 = jnp.zeros_like(C)
+    else:
+        b0 = beta0[..., None] if beta0.ndim == C.ndim - 1 else beta0
+        X0 = jnp.broadcast_to(b0, C.shape).astype(C.dtype)
 
     def body(_, carry):
         x, z, t = carry
@@ -136,7 +146,9 @@ def solve_lasso_grid(Sigmas: jnp.ndarray, cs: jnp.ndarray,
 
 @partial(jax.jit, static_argnames=("iters",))
 def solve_lasso_eq2(Sigmas: jnp.ndarray, cs: jnp.ndarray, lam, *,
-                    iters: int = 400) -> jnp.ndarray:
+                    iters: int = 400,
+                    beta0: jnp.ndarray | None = None,
+                    lam_max: jnp.ndarray | None = None) -> jnp.ndarray:
     """Batched lasso in the PAPER'S eq.-2 convention:
 
         (1/n)||y_t - X_t b||^2 + lam ||b||_1
@@ -145,11 +157,18 @@ def solve_lasso_eq2(Sigmas: jnp.ndarray, cs: jnp.ndarray, lam, *,
     normalized-gradient convention — step 2/max(2*lambda_max, eps),
     threshold weight lam/2 — so callers can never mismatch the pair
     (passing an unhalved lam with the eq.-2 step runs at double the
-    intended regularization with no error)."""
-    from repro.core.solvers import lasso_stats_step_scale
-    etas = jax.vmap(lasso_stats_step_scale)(Sigmas)
+    intended regularization with no error). `beta0` (m, p) warm-starts
+    the FISTA iterates (streaming refits restart from the previous
+    solution). `lam_max` (m,) are precomputed per-task largest
+    eigenvalues; callers that also run the debias solve pass one shared
+    power iteration instead of paying it twice."""
+    if lam_max is None:
+        from repro.core.solvers import lasso_stats_step_scale
+        etas = jax.vmap(lasso_stats_step_scale)(Sigmas)
+    else:
+        etas = 2.0 / jnp.maximum(2.0 * lam_max, 1e-12)
     return solve_lasso_batched(Sigmas, cs, 0.5 * jnp.asarray(lam),
-                               iters=iters, etas=etas)
+                               iters=iters, etas=etas, beta0=beta0)
 
 
 @partial(jax.jit, static_argnames=("iters",))
@@ -176,18 +195,33 @@ def debias_batched(Sigmas: jnp.ndarray, cs: jnp.ndarray,
     return beta_hat + jnp.einsum("tij,tj->ti", Ms, resid_corr)
 
 
+def scaled_identity_m0(Sigmas: jnp.ndarray) -> jnp.ndarray:
+    """Default M warm start: identity scaled by 1/diag(Sigma) per task
+    (diagonal, so it is its own transpose in either M/C convention)."""
+    m, p, _ = Sigmas.shape
+    eye = jnp.broadcast_to(jnp.eye(p, dtype=Sigmas.dtype), (m, p, p))
+    return eye / jnp.maximum(
+        jnp.diagonal(Sigmas, axis1=-2, axis2=-1), 1e-12)[:, None, :]
+
+
 @partial(jax.jit, static_argnames=("iters",))
-def inverse_hessian_batched(Sigmas: jnp.ndarray, mu,
-                            iters: int = 600) -> jnp.ndarray:
+def inverse_hessian_batched(Sigmas: jnp.ndarray, mu, iters: int = 600,
+                            M0: jnp.ndarray | None = None,
+                            lam_max: jnp.ndarray | None = None
+                            ) -> jnp.ndarray:
     """Approximate inverse Ms (m, p, p) of a stack of PSD covariances —
     the Javanmard-Montanari program for all tasks and all p rows as ONE
-    multi-RHS batched solve (m*p right-hand sides)."""
+    multi-RHS batched solve (m*p right-hand sides). `M0` warm-starts the
+    solve (e.g. the previous generation's Ms in a streaming refit);
+    default is the scaled identity of the single-task solver. `lam_max`
+    (m,) lets callers share one power iteration with the lasso solve."""
     m, p, _ = Sigmas.shape
-    etas = 1.0 / jnp.maximum(power_iteration_batched(Sigmas), 1e-12)
+    if lam_max is None:
+        lam_max = power_iteration_batched(Sigmas)
+    etas = 1.0 / jnp.maximum(lam_max, 1e-12)
     eye = jnp.broadcast_to(jnp.eye(p, dtype=Sigmas.dtype), (m, p, p))
-    # warm start: scaled identity (same as the single-task solver)
-    C0 = eye / jnp.maximum(
-        jnp.diagonal(Sigmas, axis1=-2, axis2=-1), 1e-12)[:, None, :]
+    C0 = scaled_identity_m0(Sigmas) if M0 is None else \
+        jnp.swapaxes(M0, -1, -2)
     Cs = solve_lasso_batched(Sigmas, eye, mu, iters=iters, etas=etas,
                              beta0=C0)
     return jnp.swapaxes(Cs, -1, -2)

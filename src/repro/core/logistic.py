@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.debias import inverse_hessian_m
+from repro.core.engine import sufficient_stats
 from repro.core.prox import soft_threshold, support_from_rows
 from repro.core.solvers import fista, power_iteration, refit_ols_masked
 
@@ -44,8 +45,8 @@ def debias_logistic(X: jnp.ndarray, y: jnp.ndarray, beta_hat: jnp.ndarray,
     n = X.shape[0]
     z = X @ beta_hat
     w = jax.nn.sigmoid(z) * jax.nn.sigmoid(-z)               # W_kk
-    Sigma_w = (X.T * w) @ X / n                              # n^-1 X^T W X
-    M = inverse_hessian_m(Sigma_w, mu, iters=iters)
+    Sigma_w, _ = sufficient_stats(X[None], y[None], weights=w[None])
+    M = inverse_hessian_m(Sigma_w[0], mu, iters=iters)       # n^-1 X^T W X
     score = (0.5 * (y + 1.0)) - jax.nn.sigmoid(z)            # 1/2(y+1) - sigma(Xb)
     return beta_hat + (M @ (X.T @ score)) / n
 
@@ -75,7 +76,7 @@ def group_logistic_lasso(Xs: jnp.ndarray, ys: jnp.ndarray, lam,
     """Centralized multi-task group-lasso logistic baseline. Returns (p, m)."""
     from repro.core.prox import group_soft_threshold
     m, n, p = Xs.shape
-    Sigmas = jnp.einsum("tni,tnj->tij", Xs, Xs) / n
+    Sigmas, _ = sufficient_stats(Xs, ys)
     L = 0.25 / m * jnp.max(jax.vmap(power_iteration)(Sigmas))
     step = 1.0 / jnp.maximum(L, 1e-12)
 
@@ -93,7 +94,7 @@ def icap_logistic(Xs: jnp.ndarray, ys: jnp.ndarray, lam, iters: int = 600) -> jn
     """iCAP (l1/linf) multi-task logistic baseline. Returns (p, m)."""
     from repro.core.prox import prox_linf
     m, n, p = Xs.shape
-    Sigmas = jnp.einsum("tni,tnj->tij", Xs, Xs) / n
+    Sigmas, _ = sufficient_stats(Xs, ys)
     L = 0.25 / m * jnp.max(jax.vmap(power_iteration)(Sigmas))
     step = 1.0 / jnp.maximum(L, 1e-12)
 

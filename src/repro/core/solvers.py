@@ -86,9 +86,9 @@ def group_lasso(Xs: jnp.ndarray, ys: jnp.ndarray, lam, iters: int = 400) -> jnp.
 
     Xs: (m, n, p), ys: (m, n). Returns B: (p, m) (rows = variables).
     """
+    from repro.core.engine import sufficient_stats
     m, n, p = Xs.shape
-    Sigmas = jnp.einsum("tni,tnj->tij", Xs, Xs) / n          # (m, p, p)
-    cs = jnp.einsum("tni,tn->ti", Xs, ys) / n                # (m, p)
+    Sigmas, cs = sufficient_stats(Xs, ys)                    # (m,p,p), (m,p)
     L = 2.0 / m * jnp.max(jax.vmap(power_iteration)(Sigmas))
     step = 1.0 / jnp.maximum(L, 1e-12)
 
@@ -102,9 +102,9 @@ def group_lasso(Xs: jnp.ndarray, ys: jnp.ndarray, lam, iters: int = 400) -> jnp.
 @partial(jax.jit, static_argnames=("iters",))
 def icap(Xs: jnp.ndarray, ys: jnp.ndarray, lam, iters: int = 400) -> jnp.ndarray:
     """iCAP estimator: l1/linf composite penalty (Zhao et al., 2009)."""
+    from repro.core.engine import sufficient_stats
     m, n, p = Xs.shape
-    Sigmas = jnp.einsum("tni,tnj->tij", Xs, Xs) / n
-    cs = jnp.einsum("tni,tn->ti", Xs, ys) / n
+    Sigmas, cs = sufficient_stats(Xs, ys)
     L = 2.0 / m * jnp.max(jax.vmap(power_iteration)(Sigmas))
     step = 1.0 / jnp.maximum(L, 1e-12)
 

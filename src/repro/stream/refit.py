@@ -1,0 +1,80 @@
+"""Incremental DSML refresh from streaming sufficient statistics.
+
+A refit re-runs Algorithm 1's compute (local lasso -> debias ->
+group-threshold) on the state's current `(Sigma, c)` — identical math
+to `dsml_fit` on the data the state has absorbed, but with the step-1
+FISTA warm-started from the previous solution. Warm starts matter
+because consecutive refits see nearly identical statistics: the
+iterates start at (numerically) the previous optimum, so a fraction of
+the cold iteration budget reaches the same tolerance — that is the
+warm/cold gap `benchmarks/stream_bench.py` measures.
+
+`RefitInfo.jaccard` reports support drift against the previous
+generation so callers can refit lazily: an unchanged support (jaccard
+== 1) means the served model has not moved and the next refit can wait.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import (
+    debias_batched, inverse_hessian_batched, power_iteration_batched,
+    scaled_identity_m0, solve_lasso_eq2,
+)
+from repro.core.prox import support_from_rows
+from repro.stream.state import StreamState
+
+
+class RefitInfo(NamedTuple):
+    jaccard: jnp.ndarray        # () similarity of new vs previous support
+    support_size: jnp.ndarray   # () int32 |S_hat| after thresholding
+    generation: jnp.ndarray     # () int32 generation of the NEW state
+
+
+def jaccard_support(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """|a & b| / |a | b|, defined as 1.0 when both supports are empty."""
+    inter = jnp.sum(a & b)
+    union = jnp.sum(a | b)
+    return jnp.where(union > 0, inter / jnp.maximum(union, 1), 1.0)
+
+
+@partial(jax.jit, static_argnames=("lasso_iters", "debias_iters", "warm"))
+def refit(state: StreamState, lam, mu, Lam, lasso_iters: int = 400,
+          debias_iters: int = 600,
+          warm: bool = True) -> Tuple[StreamState, RefitInfo]:
+    """One DSML refresh on the state's statistics.
+
+    Returns the new state (updated beta/M/support, generation + 1) and
+    a `RefitInfo`. With `warm=True` both solves restart from the
+    previous generation: the lasso from `beta_local` (an empty state's
+    zeros make the first warm refit identical to a cold one) and the
+    debias M solve from `Ms` (generation 0 falls back to the engine's
+    scaled-identity start, selected under jit via the traced
+    generation).
+    """
+    beta0 = state.beta_local if warm else None
+    M0 = None
+    if warm:
+        M0 = jnp.where(state.generation > 0, state.Ms,
+                       scaled_identity_m0(state.Sigmas))
+    lam_max = power_iteration_batched(state.Sigmas)
+    beta_hat = solve_lasso_eq2(state.Sigmas, state.cs, lam,
+                               iters=lasso_iters, beta0=beta0,
+                               lam_max=lam_max)
+    Ms = inverse_hessian_batched(state.Sigmas, mu, iters=debias_iters,
+                                 M0=M0, lam_max=lam_max)
+    beta_u = debias_batched(state.Sigmas, state.cs, beta_hat, Ms)
+    support = support_from_rows(beta_u.T, Lam)
+    beta_tilde = beta_u * support[None, :]
+    new_state = state._replace(
+        beta_local=beta_hat, Ms=Ms, beta_u=beta_u, beta_tilde=beta_tilde,
+        support=support, generation=state.generation + 1)
+    info = RefitInfo(
+        jaccard=jaccard_support(support, state.support).astype(state.cs.dtype),
+        support_size=jnp.sum(support).astype(jnp.int32),
+        generation=new_state.generation)
+    return new_state, info

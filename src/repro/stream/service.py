@@ -1,0 +1,191 @@
+"""StreamingDsmlService: the online DSML loop as a servable driver.
+
+Ties the streaming pieces together around one `StreamState`:
+
+    ingest loop     raw minibatches fold into the state (host path,
+                    decayed, sliding-window, or SPMD over a data x task
+                    mesh via `stream.accumulate`);
+    refit policy    a refit runs every `refit_every` ingested samples;
+                    when the refreshed support has not drifted
+                    (jaccard >= 1 - drift_threshold) the interval
+                    doubles, up to `max_refit_interval` — stationary
+                    traffic converges to rare refits, a support shift
+                    snaps the cadence back to the base rate;
+    warm starts     generation-0 refits run the full cold budget,
+                    later ones warm-start both solves (lasso from
+                    `beta_local`, debias from `Ms`) with the
+                    `warm_*_iters` budgets (default: a quarter);
+    serving         `predict` applies the current `beta_tilde`;
+    persistence     `save`/`load` round-trip the state through
+                    `checkpoint/io` (npz), so a restarted service
+                    resumes serving and refitting without replay.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.io import restore_pytree, save_pytree
+from repro.stream.accumulate import ingest_sharded
+from repro.stream.refit import RefitInfo, refit
+from repro.stream.state import (
+    StreamState, init_stream_state, init_window, ingest, window_ingest,
+    window_stats,
+)
+
+
+@jax.jit
+def _predict_tasks(beta_tilde: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("tnp,tp->tn", X, beta_tilde)
+
+
+@jax.jit
+def _predict_shared(beta_tilde: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("np,tp->tn", X, beta_tilde)
+
+
+class StreamingDsmlService:
+    """Online DSML over continuously arriving multi-task traffic."""
+
+    def __init__(self, m: int, p: int, *, lam, mu, Lam,
+                 dtype=jnp.float32,
+                 decay: float = 1.0,
+                 window: Optional[int] = None,
+                 refit_every: int = 2048,
+                 drift_threshold: float = 0.05,
+                 max_refit_interval: Optional[int] = None,
+                 lasso_iters: int = 400,
+                 debias_iters: int = 600,
+                 warm_lasso_iters: Optional[int] = None,
+                 warm_debias_iters: Optional[int] = None,
+                 mesh=None, data_axis: str = "data",
+                 task_axis: str = "task"):
+        if window is not None and mesh is not None:
+            raise ValueError("sliding-window ingestion is host-only; "
+                             "pass decay= for sharded non-stationarity")
+        if window is not None and decay != 1.0:
+            raise ValueError("decay and window are alternative forgetting "
+                             "schemes; the window path aggregates its "
+                             "chunks unweighted, so pass one or the other")
+        self.m, self.p = m, p
+        self.lam, self.mu, self.Lam = lam, mu, Lam
+        self.decay = float(decay)
+        self.lasso_iters = lasso_iters
+        self.debias_iters = debias_iters
+        self.warm_lasso_iters = warm_lasso_iters if warm_lasso_iters \
+            is not None else max(lasso_iters // 4, 25)
+        self.warm_debias_iters = warm_debias_iters if warm_debias_iters \
+            is not None else max(debias_iters // 4, 25)
+        self.refit_every = refit_every
+        self.drift_threshold = float(drift_threshold)
+        self.max_refit_interval = max_refit_interval \
+            if max_refit_interval is not None else 16 * refit_every
+        self.mesh, self.data_axis, self.task_axis = mesh, data_axis, task_axis
+        self.state = init_stream_state(m, p, dtype)
+        self.window = init_window(window, m, p, dtype) if window else None
+        self._interval = refit_every
+        self._since_refit = 0
+        self.last_info: Optional[RefitInfo] = None
+
+    # -- ingestion --------------------------------------------------------
+
+    def ingest(self, X_batch: jnp.ndarray,
+               y_batch: jnp.ndarray) -> Optional[RefitInfo]:
+        """Fold one (m, n, p)/(m, n) minibatch in; maybe refit.
+
+        Returns the `RefitInfo` when this chunk triggered a refit,
+        None otherwise.
+        """
+        if self.window is not None:
+            self.window = window_ingest(self.window, X_batch, y_batch)
+        elif self.mesh is not None:
+            self.state = ingest_sharded(self.state, X_batch, y_batch,
+                                        self.mesh, decay=self.decay,
+                                        data_axis=self.data_axis,
+                                        task_axis=self.task_axis)
+        else:
+            self.state = ingest(self.state, X_batch, y_batch,
+                                decay=self.decay)
+        self._since_refit += X_batch.shape[1]
+        if self._since_refit >= self._interval:
+            return self.refit()
+        return None
+
+    # -- refit policy -----------------------------------------------------
+
+    def refit(self) -> RefitInfo:
+        """Force a DSML refresh now and adapt the refit cadence."""
+        if self.window is not None and int(self.window.seen) > 0:
+            # an empty ring buffer (fresh service, or state restored
+            # without its window) must not wipe the stats with zeros
+            Sigmas, cs, counts = window_stats(self.window)
+            self.state = self.state._replace(Sigmas=Sigmas, cs=cs,
+                                             counts=counts)
+        warm = int(self.state.generation) > 0
+        l_iters = self.warm_lasso_iters if warm else self.lasso_iters
+        d_iters = self.warm_debias_iters if warm else self.debias_iters
+        self.state, info = refit(self.state, self.lam, self.mu, self.Lam,
+                                 lasso_iters=l_iters,
+                                 debias_iters=d_iters, warm=warm)
+        drift = 1.0 - float(info.jaccard)
+        if warm and drift <= self.drift_threshold:
+            self._interval = min(2 * self._interval, self.max_refit_interval)
+        else:
+            self._interval = self.refit_every
+        self._since_refit = 0
+        self.last_info = info
+        return info
+
+    # -- serving ----------------------------------------------------------
+
+    def predict(self, X: jnp.ndarray) -> jnp.ndarray:
+        """Scores under the current servable model.
+
+        X (m, n, p) gives per-task designs -> (m, n); X (n, p) is one
+        shared design scored by every task's estimate -> (m, n).
+        """
+        if X.ndim == 2:
+            return _predict_shared(self.state.beta_tilde, X)
+        return _predict_tasks(self.state.beta_tilde, X)
+
+    @property
+    def generation(self) -> int:
+        return int(self.state.generation)
+
+    @property
+    def samples_seen(self) -> float:
+        """Effective per-task sample count (decayed if decay < 1)."""
+        return float(jnp.max(self.state.counts))
+
+    # -- persistence ------------------------------------------------------
+
+    def _ckpt_tree(self):
+        # window mode keeps the authoritative statistics in the ring
+        # buffer, so it must round-trip alongside the state
+        if self.window is not None:
+            return {"state": self.state, "window": self.window}
+        return {"state": self.state}
+
+    def save(self, path: str) -> None:
+        save_pytree(path, self._ckpt_tree())
+
+    def load(self, path: str) -> None:
+        """Restore a checkpointed state (shape/dtype-validated; a
+        window-mode service restores its ring buffer too). Loading a
+        window-mode checkpoint into a non-window service (or vice
+        versa) raises rather than silently changing the forgetting
+        semantics."""
+        if self.window is None:
+            import numpy as np
+            fname = path if path.endswith(".npz") else path + ".npz"
+            if any(k.startswith("window/") for k in np.load(fname).files):
+                raise ValueError(
+                    "checkpoint was saved by a window-mode service; "
+                    "construct with window= to restore it")
+        restored = restore_pytree(path, self._ckpt_tree())
+        self.state = restored["state"]
+        if self.window is not None:
+            self.window = restored["window"]
+        self._since_refit = 0

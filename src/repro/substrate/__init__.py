@@ -5,16 +5,18 @@ releases (shard_map location and kwargs, ambient-mesh context, mesh
 construction) plus the host-device-count and subprocess-probe plumbing
 shared by tests and benchmarks.
 """
-from repro.substrate.collectives import all_gather_tasks, all_to_all_experts
+from repro.substrate.collectives import (
+    all_gather_tasks, all_to_all_experts, psum_stats,
+)
 from repro.substrate.compat import make_mesh, shard_map, use_mesh
 from repro.substrate.hostenv import force_host_device_count, host_device_env
-from repro.substrate.mesh import data_model_mesh, task_mesh
+from repro.substrate.mesh import data_model_mesh, data_task_mesh, task_mesh
 from repro.substrate.probes import REPO_ROOT, run_probe
 
 __all__ = [
-    "all_gather_tasks", "all_to_all_experts",
+    "all_gather_tasks", "all_to_all_experts", "psum_stats",
     "make_mesh", "shard_map", "use_mesh",
     "force_host_device_count", "host_device_env",
-    "data_model_mesh", "task_mesh",
+    "data_model_mesh", "data_task_mesh", "task_mesh",
     "REPO_ROOT", "run_probe",
 ]

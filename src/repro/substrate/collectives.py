@@ -19,3 +19,14 @@ def all_to_all_experts(x: jnp.ndarray, axis: str, *, split_axis: int = 0,
                        concat_axis: int = 0) -> jnp.ndarray:
     """all_to_all over mesh `axis` (MoE dispatch/return)."""
     return jax.lax.all_to_all(x, axis, split_axis, concat_axis, tiled=False)
+
+
+def psum_stats(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Sum partial sufficient statistics over mesh `axis`.
+
+    The streaming accumulator computes per-device partial (Sigma, c)
+    sums over the minibatch rows it owns and reduces them here — the
+    additive-stats property is what makes engine-level SPMD a single
+    psum instead of gathering raw samples.
+    """
+    return jax.lax.psum(x, axis)

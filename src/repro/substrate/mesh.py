@@ -16,3 +16,13 @@ def data_model_mesh(model_axis: int = 1):
     """2-D (data, model) mesh over whatever devices exist."""
     n = len(jax.devices())
     return make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def data_task_mesh(n_task: int = 1, n_data: int | None = None,
+                   axes: tuple[str, str] = ("data", "task")):
+    """2-D (data, task) mesh for the streaming layer: minibatch rows are
+    sharded over `data` and reduced with one psum; tasks stay sharded
+    over `task` (default: all remaining devices go to `data`)."""
+    if n_data is None:
+        n_data = len(jax.devices()) // n_task
+    return make_mesh((n_data, n_task), axes)

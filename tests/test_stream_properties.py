@@ -1,0 +1,55 @@
+"""Property tests: streaming statistics are additive under ANY chunking.
+
+Hypothesis draws arbitrary split points of an (X, y) stream; chunked
+`ingest` must match the one-shot `sufficient_stats` reduction, and
+ingest order must not matter for the merge of disjoint shards.
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dep (pip install .[test])")
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sufficient_stats
+from repro.stream import ingest, init_stream_state, merge
+
+M, N, P = 3, 48, 12
+KEY = jax.random.PRNGKey(0)
+XS = jax.random.normal(KEY, (M, N, P))
+YS = jax.random.normal(jax.random.PRNGKey(1), (M, N))
+S_REF, C_REF = sufficient_stats(XS, YS)
+
+
+def _cuts(points):
+    return sorted(set(points))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=N - 1),
+                min_size=0, max_size=6))
+def test_ingest_additive_over_any_split(points):
+    bounds = [0] + _cuts(points) + [N]
+    state = init_stream_state(M, P)
+    for lo, hi in zip(bounds, bounds[1:]):
+        if hi > lo:
+            state = ingest(state, XS[:, lo:hi], YS[:, lo:hi])
+    np.testing.assert_allclose(np.asarray(state.Sigmas), np.asarray(S_REF),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state.cs), np.asarray(C_REF),
+                               atol=1e-5)
+    assert float(state.counts[0]) == N
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=N - 1))
+def test_merge_of_disjoint_shards_is_order_invariant(cut):
+    a = ingest(init_stream_state(M, P), XS[:, :cut], YS[:, :cut])
+    b = ingest(init_stream_state(M, P), XS[:, cut:], YS[:, cut:])
+    ab, ba = merge(a, b), merge(b, a)
+    for x, y in ((ab.Sigmas, ba.Sigmas), (ab.cs, ba.cs)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ab.Sigmas), np.asarray(S_REF),
+                               atol=1e-5)
