@@ -3,7 +3,8 @@ PY ?= python
 # benchmarks.paper_common)
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
-.PHONY: test test-cpu8 bench-smoke bench-stream-smoke smoke-examples
+.PHONY: test test-cpu8 bench-smoke bench-json check-regression \
+	bench-stream-smoke smoke-examples
 
 test:
 	$(PY) -m pytest -q
@@ -20,6 +21,14 @@ bench-smoke:
 	$(PY) benchmarks/kernels_bench.py
 	$(PY) benchmarks/communication.py
 	$(PY) benchmarks/fig1_regression.py --smoke
+
+# machine-readable kernel bench rows, tracked across PRs; the committed
+# BENCH_kernels.json is the perf baseline check-regression gates on
+bench-json:
+	$(PY) -m benchmarks.run --only kern --json-out BENCH_kernels.json
+
+check-regression:
+	$(PY) benchmarks/check_regression.py
 
 # streaming subsystem: ingest throughput + warm-vs-cold refit, with the
 # sharded data x task accumulator exercised on 8 forced host devices

@@ -1,0 +1,83 @@
+"""Perf regression gate on the committed kernel benchmark JSON.
+
+`make bench-json` writes BENCH_kernels.json (via `benchmarks/run.py
+--json-out`); this script fails CI when a tracked speedup ratio drops
+below its floor — the fused batched kernel must never be slower than
+the vmap path it replaced, and the fused-momentum FISTA iteration must
+never be slower than the two-op pair.
+
+Usage:
+    python benchmarks/check_regression.py [--current PATH]
+                                          [--baseline PATH]
+
+With only `--current` (default BENCH_kernels.json) the floors are
+checked on that file — on the committed baseline this is deterministic.
+With `--baseline` (e.g. the committed JSON from the previous PR) the
+current speedups must also not collapse to less than `--max-drop`
+(default 0.5) of the baseline's. When REGENERATING the JSON on a noisy
+CPU box, the interpret-mode ratios carry ~10% run-to-run noise even
+with the median-of-paired-ratios estimator: a sub-floor fused-over-vmap
+on a fresh run means "re-run on a quiet machine", not necessarily a
+kernel regression — the floor exists to keep a bad number from being
+committed as the new baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# (row name, floor for its `speedup` field). The fused-over-vmap parity
+# is the hard 1.0x contract from the kernel's introduction; the two
+# engine-v2 pairs compare near-identical interpret-mode computations
+# whose CPU ratio is 1.0 +/- ~10% measurement noise, so their floors
+# leave that margin (the TPU win — fewer dispatches/HBM trips — is not
+# what CPU interpret mode measures).
+FLOORS = (
+    ("kernel_ista_batched_fused_over_vmap", 1.0),
+    ("kernel_fista_fused_over_two_op", 0.85),
+    ("logistic_solve_batched_over_vmap", 0.85),
+)
+
+
+def _speedups(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: r["speedup"] for r in rows if "speedup" in r}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="BENCH_kernels.json")
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--max-drop", type=float, default=0.5,
+                    help="min allowed current/baseline speedup ratio")
+    args = ap.parse_args()
+
+    cur = _speedups(args.current)
+    failures = []
+    for name, floor in FLOORS:
+        if name not in cur:
+            failures.append(f"{name}: missing from {args.current}")
+        elif cur[name] < floor:
+            failures.append(f"{name}: {cur[name]:.2f}x < floor {floor:.2f}x")
+        else:
+            print(f"ok {name}: {cur[name]:.2f}x (floor {floor:.2f}x)")
+
+    if args.baseline:
+        base = _speedups(args.baseline)
+        for name, _ in FLOORS:
+            if name in base and name in cur:
+                ratio = cur[name] / base[name]
+                if ratio < args.max_drop:
+                    failures.append(
+                        f"{name}: {cur[name]:.2f}x is {ratio:.2f} of "
+                        f"baseline {base[name]:.2f}x (< {args.max_drop})")
+
+    for f in failures:
+        print(f"REGRESSION {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,12 +11,39 @@ experiment sweeps persist JSON artifacts under experiments/paper/.
   roof   — dry-run / roofline summary (reads experiments/dryrun)
 
 Usage: python -m benchmarks.run [--only fig1,comm] [--runs N]
+                                [--json-out BENCH_kernels.json]
+
+`--json-out` additionally persists the kern section as machine-readable
+JSON (one object per row: name/us plus any derived fields like flops
+and speedup) so the perf trajectory is tracked across PRs —
+`benchmarks/check_regression.py` gates on it.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+
+
+def rows_to_json(rows) -> list:
+    """Parse ``name,us,k=v,...`` benchmark rows into JSON objects.
+
+    Numeric derived fields are parsed as floats (a trailing ``x`` on
+    speedups is stripped); anything unparsable stays a string.
+    """
+    out = []
+    for row in rows:
+        parts = row.split(",")
+        d = {"name": parts[0], "us": float(parts[1])}
+        for extra in parts[2:]:
+            k, _, v = extra.partition("=")
+            try:
+                d[k] = float(v[:-1] if v.endswith("x") else v)
+            except ValueError:
+                d[k] = v
+        out.append(d)
+    return out
 
 
 def main() -> None:
@@ -25,6 +52,8 @@ def main() -> None:
                     help="comma list: fig1,fig2,comm,rates,kern,roof")
     ap.add_argument("--runs", type=int, default=5,
                     help="averaging runs for the paper sweeps")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="also write the kern rows as JSON to PATH")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -51,14 +80,28 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    wrote_json = False
     for name, fn in sections:
         try:
-            for row in fn():
+            rows = fn()
+            for row in rows:
                 print(row, flush=True)
+            if name == "kern" and args.json_out:
+                with open(args.json_out, "w") as f:
+                    json.dump(rows_to_json(rows), f, indent=2)
+                    f.write("\n")
+                print(f"# wrote {args.json_out}", file=sys.stderr)
+                wrote_json = True
         except Exception:
             failures += 1
             print(f"{name}_FAILED,0,see stderr", flush=True)
             traceback.print_exc()
+    if args.json_out and not wrote_json:
+        # never exit 0 leaving a stale baseline: the kern section was
+        # deselected or failed, so the requested JSON was not produced
+        print(f"ERROR: --json-out {args.json_out} requested but the kern "
+              "section did not run to completion", file=sys.stderr)
+        failures += 1
     if failures:
         sys.exit(1)
 

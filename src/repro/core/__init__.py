@@ -4,6 +4,7 @@ from repro.core.dsml import DsmlResult, dsml_fit, dsml_fit_sharded
 from repro.core.debias import coherence, debias_lasso, inverse_hessian_m
 from repro.core.logistic import (
     debias_logistic,
+    debias_logistic_batched,
     dsml_logistic_fit,
     group_logistic_lasso,
     icap_logistic,
@@ -33,6 +34,7 @@ from repro.core.engine import (
     solve_lasso_eq2,
     solve_lasso_eq2_grid,
     solve_lasso_grid,
+    solve_logistic_lasso_batched,
     sufficient_stats,
 )
 from repro.core.solvers import (
@@ -56,7 +58,8 @@ __all__ = [
     "dirty_model",
     "DsmlResult", "dsml_fit", "dsml_fit_sharded",
     "coherence", "debias_lasso", "inverse_hessian_m",
-    "debias_logistic", "dsml_logistic_fit", "group_logistic_lasso",
+    "debias_logistic", "debias_logistic_batched", "dsml_logistic_fit",
+    "group_logistic_lasso",
     "icap_logistic", "logistic_lasso", "refit_logistic_masked",
     "classification_error", "estimation_error", "hamming",
     "prediction_error", "support_of",
@@ -64,7 +67,7 @@ __all__ = [
     "prox_linf", "soft_threshold", "support_from_rows",
     "debias_batched", "inverse_hessian_batched", "power_iteration_batched",
     "solve_lasso_batched", "solve_lasso_eq2", "solve_lasso_eq2_grid",
-    "solve_lasso_grid", "sufficient_stats",
+    "solve_lasso_grid", "solve_logistic_lasso_batched", "sufficient_stats",
     "fista", "group_lasso", "icap", "lasso", "power_iteration",
     "refit_ols_masked", "refit_ols_masked_stats",
     "MultiTaskData", "ar_covariance", "gen_classification",

@@ -19,6 +19,16 @@ matmul (the kernel's jnp oracle), so CPU tests stay fast; pass
 reproduce the original FISTA iterates exactly (same step sizes, same
 momentum schedule) because the engine works in the normalized gradient
 convention g = Sigma b - c with caller-supplied per-task step sizes.
+
+Engine v2 (DESIGN.md §10): each FISTA iteration is ONE fused kernel
+dispatch (`fista_step_batched` computes the prox'd iterate and the
+momentum extrapolation in the same epilogue), `tol=` adds
+convergence-aware early exit on the prox-gradient KKT residual, the
+kernel block policy defaults to the autotuned winner for the shape
+(`kernels/autotune.py`; explicit `block=` wins), and
+`solve_logistic_lasso_batched` extends the batched loop to the
+Section-4 logistic path — every task's l1-logistic solve as one
+all-tasks einsum gradient instead of a vmap of per-task FISTA loops.
 """
 from __future__ import annotations
 
@@ -28,13 +38,16 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ista_step.ops import ista_step_batched
-from repro.kernels.ista_step.ref import ista_step_batched_ref
+from repro.core.prox import soft_threshold
+from repro.core.solvers import lasso_stats_step_scale, power_iteration
+from repro.kernels.ista_step.ops import fista_step_batched
+from repro.kernels.ista_step.ref import (
+    fista_step_batched_ref, ista_step_batched_ref,
+)
 
 
 def power_iteration_batched(Sigmas: jnp.ndarray, iters: int = 64) -> jnp.ndarray:
     """Largest eigenvalue per task of a (m, p, p) PSD stack."""
-    from repro.core.solvers import power_iteration
     return jax.vmap(partial(power_iteration, iters=iters))(Sigmas)
 
 
@@ -60,14 +73,58 @@ def sufficient_stats(Xs: jnp.ndarray, ys: jnp.ndarray,
     return Sigmas, cs
 
 
-@partial(jax.jit, static_argnames=("iters", "use_kernel", "interpret",
-                                   "block"))
+def _fista_loop(body, init, iters, tol, check_every, residual):
+    """Shared FISTA loop driver. `body` maps a (x, z, t) carry one
+    iteration forward; with `tol=None` it runs the fixed `iters` budget
+    in a fori_loop, otherwise `check_every`-iteration chunks of a
+    while_loop that stops once `residual(x) <= tol`. The final chunk is
+    truncated so `iters` is an EXACT ceiling. Returns (x, n_iters_run)."""
+    if tol is None:
+        carry = jax.lax.fori_loop(0, iters, lambda _, c: body(c), init)
+        return carry[0], jnp.array(iters, jnp.int32)
+
+    K = min(check_every, iters)
+
+    def cond(state):
+        _, it, res = state
+        return jnp.logical_and(it < iters, res > tol)
+
+    def chunk(state):
+        carry, it, _ = state
+        end = jnp.minimum(it + K, iters)
+        carry = jax.lax.fori_loop(it, end, lambda _, c: body(c), carry)
+        return carry, end, residual(carry[0])
+
+    carry, n_iters, _ = jax.lax.while_loop(
+        cond, chunk, (init, jnp.array(0, jnp.int32),
+                      jnp.array(jnp.inf, init[0].dtype)))
+    return carry[0], n_iters
+
+
+def resolve_block_policy(m: int, p: int, r: int, dtype, block,
+                         use_kernel: bool):
+    """Engine v2 block policy: an explicit `block` (int or (bp, br, bk)
+    triple) always wins; otherwise, when the kernel path is active, the
+    autotuned winner for (backend, m, p, r, dtype) is looked up (and
+    timed once on a miss). The oracle path never consults the cache."""
+    from repro.kernels.ista_step.ops import is_ragged
+    if block is not None:
+        return block
+    if not use_kernel or is_ragged(p, r):
+        # the kernel dispatcher routes ragged shapes to the jnp oracle,
+        # which ignores blocks — never pay (or pollute) a sweep for them
+        return 128
+    from repro.kernels.autotune import autotune_block
+    return autotune_block(m, p, r, dtype=dtype)
+
+
 def solve_lasso_batched(Sigmas: jnp.ndarray, cs: jnp.ndarray, lam, *,
                         iters: int = 400, etas: jnp.ndarray | None = None,
                         beta0: jnp.ndarray | None = None,
                         use_kernel: bool | None = None,
                         interpret: bool | None = None,
-                        block: int = 128) -> jnp.ndarray:
+                        block=None, tol=None, check_every: int = 25,
+                        return_iters: bool = False) -> jnp.ndarray:
     """FISTA on a batch of sufficient-statistics lasso problems.
 
     Sigmas: (m, p, p); cs: (m, p) for one RHS per task or (m, p, r) for
@@ -79,21 +136,49 @@ def solve_lasso_batched(Sigmas: jnp.ndarray, cs: jnp.ndarray, lam, *,
     threshold is `etas * lam`. `beta0` warm-starts the iterates.
     `use_kernel` routes the fused step through the pallas kernel
     (default: only on TPU; the jnp batched step is the fast CPU path).
+
+    Engine v2: every iteration is one fused prox + momentum step
+    (`fista_step_batched`), bitwise-identical to the historical
+    kernel-then-jnp-momentum pair. `block` is an int, an explicit
+    (bp, br, bk) triple, or None for the autotuned per-shape policy.
+    With `tol=` the fixed iteration budget becomes an exact ceiling:
+    the loop runs in `check_every`-iteration chunks of a `while_loop`
+    (final chunk truncated to the budget) and stops once the
+    prox-gradient KKT residual max|x - soft(x - eta(Sigma x - c),
+    eta lam)| drops to `tol`. `return_iters` additionally returns the
+    number of iterations actually run.
     """
+    m = cs.shape[0]
+    r = 1 if cs.ndim == 2 else cs.shape[-1]
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    block = resolve_block_policy(m, cs.shape[1], r, cs.dtype, block,
+                                 use_kernel)
+    out, n_iters = _solve_lasso_batched(
+        Sigmas, cs, lam, etas, beta0, tol, iters=iters,
+        use_kernel=use_kernel, interpret=interpret, block=block,
+        check_every=check_every)
+    return (out, n_iters) if return_iters else out
+
+
+@partial(jax.jit, static_argnames=("iters", "use_kernel", "interpret",
+                                   "block", "check_every"))
+def _solve_lasso_batched(Sigmas, cs, lam, etas, beta0, tol, *, iters,
+                         use_kernel, interpret, block, check_every):
     squeeze = cs.ndim == 2
     C = cs[..., None] if squeeze else cs
     m = C.shape[0]
     if etas is None:
         etas = 1.0 / jnp.maximum(power_iteration_batched(Sigmas), 1e-12)
     etas = jnp.broadcast_to(jnp.asarray(etas, C.dtype).reshape(-1), (m,))
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
 
     if use_kernel:
-        step = lambda Z: ista_step_batched(Sigmas, Z, C, etas, lam,
-                                           block=block, interpret=interpret)
+        step = lambda Z, X, theta: fista_step_batched(
+            Sigmas, Z, X, C, etas, lam, theta, block=block,
+            interpret=interpret)
     else:
-        step = lambda Z: ista_step_batched_ref(Sigmas, Z, C, etas, lam)
+        step = lambda Z, X, theta: fista_step_batched_ref(
+            Sigmas, Z, X, C, etas, lam, theta)
 
     if beta0 is None:
         X0 = jnp.zeros_like(C)
@@ -101,16 +186,20 @@ def solve_lasso_batched(Sigmas: jnp.ndarray, cs: jnp.ndarray, lam, *,
         b0 = beta0[..., None] if beta0.ndim == C.ndim - 1 else beta0
         X0 = jnp.broadcast_to(b0, C.shape).astype(C.dtype)
 
-    def body(_, carry):
+    def body(carry):
         x, z, t = carry
-        x_next = step(z)
         t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
-        z_next = x_next + ((t - 1.0) / t_next) * (x_next - x)
+        x_next, z_next = step(z, x, (t - 1.0) / t_next)
         return x_next, z_next, t_next
 
-    x, _, _ = jax.lax.fori_loop(
-        0, iters, body, (X0, X0, jnp.array(1.0, C.dtype)))
-    return x[..., 0] if squeeze else x
+    def residual(x):
+        # prox-gradient KKT residual: zero iff x is the lasso optimum
+        x_fp = ista_step_batched_ref(Sigmas, x, C, etas, lam)
+        return jnp.max(jnp.abs(x_fp - x))
+
+    x, n_iters = _fista_loop(body, (X0, X0, jnp.array(1.0, C.dtype)),
+                             iters, tol, check_every, residual)
+    return (x[..., 0] if squeeze else x), n_iters
 
 
 @partial(jax.jit, static_argnames=("iters", "use_kernel", "interpret",
@@ -120,7 +209,7 @@ def solve_lasso_grid(Sigmas: jnp.ndarray, cs: jnp.ndarray,
                      etas: jnp.ndarray | None = None,
                      use_kernel: bool | None = None,
                      interpret: bool | None = None,
-                     block: int = 128) -> jnp.ndarray:
+                     block=None) -> jnp.ndarray:
     """Solve every (task, lambda) pair of a tuning grid in ONE batch.
 
     Sigmas (m, p, p), cs (m, p), lams (k,) -> (k, m, p). The engine
@@ -163,7 +252,6 @@ def solve_lasso_eq2(Sigmas: jnp.ndarray, cs: jnp.ndarray, lam, *,
     eigenvalues; callers that also run the debias solve pass one shared
     power iteration instead of paying it twice."""
     if lam_max is None:
-        from repro.core.solvers import lasso_stats_step_scale
         etas = jax.vmap(lasso_stats_step_scale)(Sigmas)
     else:
         etas = 2.0 / jnp.maximum(2.0 * lam_max, 1e-12)
@@ -177,10 +265,80 @@ def solve_lasso_eq2_grid(Sigmas: jnp.ndarray, cs: jnp.ndarray, lams, *,
     """`solve_lasso_grid` in the paper's eq.-2 convention (see
     `solve_lasso_eq2`). Sigmas (m, p, p), cs (m, p), lams (k,) ->
     (k, m, p)."""
-    from repro.core.solvers import lasso_stats_step_scale
     etas = jax.vmap(lasso_stats_step_scale)(Sigmas)
     return solve_lasso_grid(Sigmas, cs, 0.5 * jnp.asarray(lams),
                             iters=iters, etas=etas)
+
+
+@partial(jax.jit, static_argnames=("iters", "momentum", "prox",
+                                   "check_every", "return_iters"))
+def solve_logistic_lasso_batched(Xs: jnp.ndarray, ys: jnp.ndarray, lam, *,
+                                 iters: int = 600,
+                                 etas: jnp.ndarray | None = None,
+                                 beta0: jnp.ndarray | None = None,
+                                 grad_scale=1.0, prox=None,
+                                 momentum: bool = True, tol=None,
+                                 check_every: int = 25,
+                                 return_iters: bool = False):
+    """One FISTA loop for a whole batch of l1-logistic regressions.
+
+    Xs (m, n, p), ys (m, n) in {-1, +1}; lam scalar or per-task (m,).
+    Returns B (m, p). The logistic loss is not a function of (Sigma, c)
+    alone, so the gradient re-touches the raw samples — but as ONE
+    all-tasks einsum `-X'(y sigmoid(-y Xb))/n` per iteration instead of
+    a vmap of m per-task FISTA loops, with per-task step sizes
+    `1 / max(lambda_max(Sigma)/4, eps)` from one shared batched power
+    iteration (the logistic Hessian is bounded by Sigma/4).
+
+    `beta0` (m, p) warm-starts the iterates (streaming refits restart
+    from the previous generation). `prox` overrides the elementwise
+    soft threshold — signature `prox(B (m, p), steps (m, 1)) -> (m, p)`
+    — which is how the group-lasso / iCAP / masked-refit variants reuse
+    this loop. `prox` is a STATIC jit argument hashed by identity:
+    when calling eagerly in a loop, pass one reused function object
+    (not a fresh lambda per call) or every call retraces. `grad_scale`
+    rescales the gradient (the multi-task objectives divide by m);
+    `momentum=False` degrades FISTA to plain proximal gradient (the
+    masked refit's historical iteration). As in
+    `solve_lasso_batched`, `tol=` stops early on the prox-gradient
+    fixed-point residual every `check_every` iterations, and
+    `return_iters` also returns the iterations run.
+    """
+    m, n, p = Xs.shape
+    lam_t = jnp.broadcast_to(jnp.asarray(lam, Xs.dtype).reshape(-1), (m,))
+    if etas is None:
+        Sigmas, _ = sufficient_stats(Xs, ys)
+        L = 0.25 * power_iteration_batched(Sigmas)
+        etas = 1.0 / jnp.maximum(L, 1e-12)
+    S = jnp.broadcast_to(jnp.asarray(etas, Xs.dtype).reshape(-1),
+                         (m,))[:, None]
+
+    def grad(B):
+        z = jnp.einsum("tnp,tp->tn", Xs, B)
+        g = -jnp.einsum("tnp,tn->tp", Xs,
+                        ys * jax.nn.sigmoid(-ys * z)) / n
+        return g * grad_scale
+
+    if prox is None:
+        prox = lambda V, steps: soft_threshold(V, steps * lam_t[:, None])
+
+    X0 = jnp.zeros((m, p), Xs.dtype) if beta0 is None \
+        else beta0.astype(Xs.dtype)
+
+    def body(carry):
+        x, z, t = carry
+        t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        x_next = prox(z - S * grad(z), S)
+        z_next = x_next + ((t - 1.0) / t_next) * (x_next - x) \
+            if momentum else x_next
+        return x_next, z_next, t_next
+
+    def residual(x):
+        return jnp.max(jnp.abs(prox(x - S * grad(x), S) - x))
+
+    x, n_iters = _fista_loop(body, (X0, X0, jnp.array(1.0, Xs.dtype)),
+                             iters, tol, check_every, residual)
+    return (x, n_iters) if return_iters else x
 
 
 def debias_batched(Sigmas: jnp.ndarray, cs: jnp.ndarray,

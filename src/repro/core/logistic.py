@@ -6,6 +6,14 @@ Model (paper eq. 7): y in {-1, +1}, P(y|x) = sigmoid(y * x @ beta).
   2. debiasing with the weighted Hessian  n^-1 X^T W X,
      W_kk = sigmoid(x_k b) * sigmoid(-x_k b),
   3. the same one-round group hard-thresholding at the master.
+
+Engine v2: every solver here is a thin wrapper over
+`core/engine.solve_logistic_lasso_batched` — one batched FISTA loop
+whose gradient is a single all-tasks einsum — instead of per-task
+`vmap(fista)` loops. `dsml_logistic_fit` also batches step 2: the m
+weighted Hessians come from one `sufficient_stats(weights=...)` call
+and the m M-estimations are one multi-RHS `inverse_hessian_batched`
+solve (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -15,40 +23,65 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.debias import inverse_hessian_m
-from repro.core.engine import sufficient_stats
-from repro.core.prox import soft_threshold, support_from_rows
-from repro.core.solvers import fista, power_iteration, refit_ols_masked
+from repro.core.engine import (
+    inverse_hessian_batched,
+    power_iteration_batched,
+    scaled_identity_m0,
+    solve_logistic_lasso_batched,
+    sufficient_stats,
+)
+from repro.core.prox import support_from_rows
 
 
 @partial(jax.jit, static_argnames=("iters",))
 def logistic_lasso(X: jnp.ndarray, y: jnp.ndarray, lam, iters: int = 600) -> jnp.ndarray:
-    """l1-regularized logistic regression. X: (n,p), y: (n,) in {-1,+1}."""
-    n = X.shape[0]
-    Sigma = (X.T @ X) / n
-    # Hessian of the logistic loss is bounded by Sigma/4.
-    L = 0.25 * power_iteration(Sigma)
-    step = 1.0 / jnp.maximum(L, 1e-12)
+    """l1-regularized logistic regression. X: (n,p), y: (n,) in {-1,+1}.
 
-    def grad(b):
-        z = X @ b
-        return -(X.T @ (y * jax.nn.sigmoid(-y * z))) / n
+    Batch-1 wrapper over the batched engine loop (the covariance behind
+    the Lipschitz bound comes from `sufficient_stats`).
+    """
+    return solve_logistic_lasso_batched(X[None], y[None], lam,
+                                        iters=iters)[0]
 
-    prox = lambda v, s: soft_threshold(v, s * lam)
-    return fista(grad, prox, jnp.zeros(X.shape[1], X.dtype), step, iters)
+
+@partial(jax.jit, static_argnames=("iters",))
+def debias_logistic_batched(Xs: jnp.ndarray, ys: jnp.ndarray,
+                            beta_hat: jnp.ndarray, mu, iters: int = 600,
+                            M0: jnp.ndarray | None = None,
+                            M0_valid: jnp.ndarray | None = None):
+    """Weighted-Hessian debias (paper Section 4) for all m tasks at
+    once — THE logistic step-2 code path, shared by `debias_logistic`,
+    `dsml_logistic_fit`, and the streaming `refit_logistic`.
+
+    One weighted `sufficient_stats` builds the m Hessians
+    n^-1 X'WX (W_kk = sigma(x_k b) sigma(-x_k b)), one multi-RHS
+    `inverse_hessian_batched` estimates all Ms, and one batched score
+    correction b + M X'(1/2(y+1) - sigma(Xb))/n debias all tasks.
+    `M0` (m, p, p) warm-starts the M solve; the traced bool `M0_valid`
+    gates it per call (a streaming generation-0 refit falls back to the
+    scaled-identity start). Returns (beta_u, Ms).
+    """
+    n = Xs.shape[1]
+    zs = jnp.einsum("tnp,tp->tn", Xs, beta_hat)
+    ws = jax.nn.sigmoid(zs) * jax.nn.sigmoid(-zs)            # W_kk
+    Sigma_w, _ = sufficient_stats(Xs, ys, weights=ws)
+    if M0 is not None and M0_valid is not None:
+        M0 = jnp.where(M0_valid, M0, scaled_identity_m0(Sigma_w))
+    Ms = inverse_hessian_batched(Sigma_w, mu, iters=iters, M0=M0)
+    score = (0.5 * (ys + 1.0)) - jax.nn.sigmoid(zs)          # 1/2(y+1) - sigma(Xb)
+    beta_u = beta_hat + jnp.einsum(
+        "tij,tj->ti", Ms, jnp.einsum("tnp,tn->tp", Xs, score)) / n
+    return beta_u, Ms
 
 
 @partial(jax.jit, static_argnames=("iters",))
 def debias_logistic(X: jnp.ndarray, y: jnp.ndarray, beta_hat: jnp.ndarray,
                     mu, iters: int = 600) -> jnp.ndarray:
-    """Debiased l1-logistic estimator (paper Section 4, classification)."""
-    n = X.shape[0]
-    z = X @ beta_hat
-    w = jax.nn.sigmoid(z) * jax.nn.sigmoid(-z)               # W_kk
-    Sigma_w, _ = sufficient_stats(X[None], y[None], weights=w[None])
-    M = inverse_hessian_m(Sigma_w[0], mu, iters=iters)       # n^-1 X^T W X
-    score = (0.5 * (y + 1.0)) - jax.nn.sigmoid(z)            # 1/2(y+1) - sigma(Xb)
-    return beta_hat + (M @ (X.T @ score)) / n
+    """Debiased l1-logistic estimator (paper Section 4, classification).
+    Batch-1 wrapper over `debias_logistic_batched`."""
+    beta_u, _ = debias_logistic_batched(X[None], y[None], beta_hat[None],
+                                        mu, iters=iters)
+    return beta_u[0]
 
 
 class DsmlLogisticResult(NamedTuple):
@@ -61,10 +94,15 @@ class DsmlLogisticResult(NamedTuple):
 @partial(jax.jit, static_argnames=("lasso_iters", "debias_iters"))
 def dsml_logistic_fit(Xs: jnp.ndarray, ys: jnp.ndarray, lam, mu, Lam,
                       lasso_iters: int = 600, debias_iters: int = 600) -> DsmlLogisticResult:
-    """DSML for multi-task classification. Xs: (m,n,p), ys: (m,n)."""
-    beta_hat = jax.vmap(lambda X, y: logistic_lasso(X, y, lam, iters=lasso_iters))(Xs, ys)
-    beta_u = jax.vmap(lambda X, y, b: debias_logistic(X, y, b, mu, iters=debias_iters))(
-        Xs, ys, beta_hat)
+    """DSML for multi-task classification. Xs: (m,n,p), ys: (m,n).
+
+    Steps 1-2 are each ONE batched engine call: the m local l1-logistic
+    solves share a single FISTA loop, and the m weighted-Hessian
+    M-estimations share a single multi-RHS lasso solve.
+    """
+    beta_hat = solve_logistic_lasso_batched(Xs, ys, lam, iters=lasso_iters)
+    beta_u, _ = debias_logistic_batched(Xs, ys, beta_hat, mu,
+                                        iters=debias_iters)
     support = support_from_rows(beta_u.T, Lam)
     beta_tilde = beta_u * support[None, :]
     return DsmlLogisticResult(beta_tilde, beta_u, support, beta_hat)
@@ -73,20 +111,22 @@ def dsml_logistic_fit(Xs: jnp.ndarray, ys: jnp.ndarray, lam, mu, Lam,
 @partial(jax.jit, static_argnames=("iters",))
 def group_logistic_lasso(Xs: jnp.ndarray, ys: jnp.ndarray, lam,
                          iters: int = 600) -> jnp.ndarray:
-    """Centralized multi-task group-lasso logistic baseline. Returns (p, m)."""
+    """Centralized multi-task group-lasso logistic baseline. Returns (p, m).
+
+    The engine loop with a shared step size (the 1/(mn) objective's
+    Lipschitz bound), the gradient scaled by 1/m, and the row-coupled
+    group soft threshold as the prox.
+    """
     from repro.core.prox import group_soft_threshold
     m, n, p = Xs.shape
     Sigmas, _ = sufficient_stats(Xs, ys)
-    L = 0.25 / m * jnp.max(jax.vmap(power_iteration)(Sigmas))
+    L = 0.25 / m * jnp.max(power_iteration_batched(Sigmas))
     step = 1.0 / jnp.maximum(L, 1e-12)
-
-    def grad(B):  # B: (p, m)
-        z = jnp.einsum("tnp,pt->tn", Xs, B)
-        g = -jnp.einsum("tnp,tn->pt", Xs, ys * jax.nn.sigmoid(-ys * z)) / n
-        return g / m
-
-    prox = lambda V, s: group_soft_threshold(V, s * lam)
-    return fista(grad, prox, jnp.zeros((p, m), Xs.dtype), step, iters)
+    prox = lambda V, steps: group_soft_threshold(V.T, steps[0, 0] * lam).T
+    B = solve_logistic_lasso_batched(Xs, ys, lam, iters=iters,
+                                     etas=jnp.full((m,), step, Xs.dtype),
+                                     grad_scale=1.0 / m, prox=prox)
+    return B.T
 
 
 @partial(jax.jit, static_argnames=("iters",))
@@ -95,31 +135,26 @@ def icap_logistic(Xs: jnp.ndarray, ys: jnp.ndarray, lam, iters: int = 600) -> jn
     from repro.core.prox import prox_linf
     m, n, p = Xs.shape
     Sigmas, _ = sufficient_stats(Xs, ys)
-    L = 0.25 / m * jnp.max(jax.vmap(power_iteration)(Sigmas))
+    L = 0.25 / m * jnp.max(power_iteration_batched(Sigmas))
     step = 1.0 / jnp.maximum(L, 1e-12)
-
-    def grad(B):
-        z = jnp.einsum("tnp,pt->tn", Xs, B)
-        g = -jnp.einsum("tnp,tn->pt", Xs, ys * jax.nn.sigmoid(-ys * z)) / n
-        return g / m
-
-    prox = lambda V, s: prox_linf(V, s * lam)
-    return fista(grad, prox, jnp.zeros((p, m), Xs.dtype), step, iters)
+    prox = lambda V, steps: prox_linf(V.T, steps[0, 0] * lam).T
+    B = solve_logistic_lasso_batched(Xs, ys, lam, iters=iters,
+                                     etas=jnp.full((m,), step, Xs.dtype),
+                                     grad_scale=1.0 / m, prox=prox)
+    return B.T
 
 
-@jax.jit
+@partial(jax.jit, static_argnames=("steps",))
 def refit_logistic_masked(X: jnp.ndarray, y: jnp.ndarray, support: jnp.ndarray,
                           steps: int = 200) -> jnp.ndarray:
-    """Newton-free masked logistic refit via gradient descent on the support."""
-    n, p = X.shape
+    """Newton-free masked logistic refit via gradient descent on the support.
+
+    The engine loop with `momentum=False` (plain proximal gradient) and
+    the support mask as the prox — identical iterates to the historical
+    hand-rolled GD loop, with the Lipschitz covariance deduped through
+    `sufficient_stats`.
+    """
     d = support.astype(X.dtype)
-    Sigma = (X.T @ X) / n
-    L = 0.25 * power_iteration(Sigma)
-    step = 1.0 / jnp.maximum(L, 1e-12)
-
-    def body(_, b):
-        z = X @ b
-        g = -(X.T @ (y * jax.nn.sigmoid(-y * z))) / n
-        return (b - step * g) * d
-
-    return jax.lax.fori_loop(0, steps, body, jnp.zeros(p, X.dtype))
+    prox = lambda V, _: V * d[None, :]
+    return solve_logistic_lasso_batched(X[None], y[None], 0.0, iters=steps,
+                                        momentum=False, prox=prox)[0]

@@ -1,3 +1,7 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# kernels/autotune.py is the shared block-size policy for the batched
+# solver kernels: per-(backend, m, p, r, dtype) winners, cached
+# in-process and under the repo cache dir (DESIGN.md §10).

@@ -1,0 +1,180 @@
+"""Block-size autotuning for the batched ISTA/FISTA Pallas kernels.
+
+The fused solver step is shape-polymorphic over (m, p, r) and its best
+(bp, br, bk) tiling depends on the backend and dtype: the 128x128 MXU
+default is right for large square solves, but small-m/multi-RHS debias
+solves and skinny r=1 lasso batches favour other tiles. `autotune_block`
+times the candidate tilings for a given problem key once, then serves
+the winner from an in-process cache backed by a JSON file under the repo
+cache dir (`.cache/autotune.json`, override with $REPRO_CACHE_DIR), so a
+process restart never re-times a known key.
+
+The engine (`core/engine.py`) uses this as its default block policy:
+`solve_lasso_batched(block=None)` on the kernel path looks the winner up
+here; an explicit `block=` always wins and never touches the cache.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ista_step.kernel import fista_step_batched_pallas
+from repro.kernels.ista_step.ops import resolve_blocks
+
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+CACHE_FILE = "autotune.json"
+
+# block candidates per grid axis; intersected with the divisors of the
+# actual dimension, so every candidate is a legal BlockSpec tiling
+BLOCK_CANDIDATES = (32, 64, 128, 256)
+
+_memory_cache: Dict[str, Tuple[int, int, int]] = {}
+
+
+def cache_path() -> Path:
+    return Path(os.environ.get("REPRO_CACHE_DIR",
+                               _REPO_ROOT / ".cache")) / CACHE_FILE
+
+
+def cache_key(backend: str, m: int, p: int, r: int, dtype) -> str:
+    return f"{backend}_m{m}_p{p}_r{r}_{jnp.dtype(dtype).name}"
+
+
+def clear_memory_cache() -> None:
+    _memory_cache.clear()
+
+
+def _load_disk() -> dict:
+    try:
+        with open(cache_path()) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _save_disk(entries: dict) -> None:
+    path = cache_path()
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(entries, indent=2, sort_keys=True))
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only checkout: the in-process cache still serves
+
+
+def block_candidates(p: int, r: int) -> List[Tuple[int, int, int]]:
+    """Legal (bp, br, bk) tilings to sweep for a (p, r) solve. bk is
+    tied to bp (the contraction tile streams the same Sigma rows the
+    output tile covers), so the sweep is |bp| x |br| candidates."""
+    bps = [b for b in BLOCK_CANDIDATES if b <= p and p % b == 0] or [p]
+    if r == 1:
+        brs = [1]
+    else:
+        brs = [b for b in BLOCK_CANDIDATES if b <= r and r % b == 0] or [r]
+    return [(bp, br, bp) for bp in bps for br in brs]
+
+
+def _time_candidate(fn, reps: int) -> float:
+    """Best-of-`reps` wall time of `fn()` in microseconds (warm-up call
+    synced first so compile time never counts). Module-level so tests
+    can count sweep invocations."""
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def warmup_cache(m: int, p: int, *, dtype=jnp.float32,
+                 reps: int = 2) -> None:
+    """Eagerly tune the two solve shapes a DSML workload of m tasks in
+    p dims hits — the r=1 lasso batch and the r=p multi-RHS debias
+    solve — so later JITTED engine calls find a warm cache.
+
+    This is the intended production entry point: every in-repo solver
+    is jitted, and the sweep refuses to run under an active trace
+    (see `autotune_block`), so without an eager warm-up the engine
+    keeps the deterministic 128 default. Call once at startup
+    (`StreamingDsmlService` does, on TPU). No-op off-TPU, where the
+    engine's default path is the jnp oracle and a sweep would time the
+    slow interpreter for nothing.
+    """
+    if jax.default_backend() != "tpu":
+        return
+    autotune_block(m, p, 1, dtype=dtype, reps=reps)
+    autotune_block(m, p, p, dtype=dtype, reps=reps)
+
+
+def autotune_block(m: int, p: int, r: int, *, dtype=jnp.float32,
+                   backend: str | None = None,
+                   interpret: bool | None = None,
+                   candidates: List[Tuple[int, int, int]] | None = None,
+                   reps: int = 2, use_disk: bool = True
+                   ) -> Tuple[int, int, int]:
+    """Winning (bp, br, bk) tiling for a batched solve of this shape.
+
+    Cache policy: in-process dict first, then the on-disk JSON, then a
+    timing sweep of `candidates` (default `block_candidates(p, r)`) on
+    synthetic data whose winner is written back to both caches.
+
+    Multi-controller guard: the winner becomes a STATIC compile
+    parameter, and a timing sweep is not deterministic across hosts —
+    divergent winners would compile divergent executables for one SPMD
+    program. With more than one jax process every host returns the
+    same deterministic default instead of sweeping.
+    """
+    if jax.process_count() > 1:
+        return resolve_blocks(p, r, 128)    # historical default, no sweep
+    backend = jax.default_backend() if backend is None else backend
+    key = cache_key(backend, m, p, r, dtype)
+    if key in _memory_cache:
+        return _memory_cache[key]
+    disk = _load_disk() if use_disk else {}
+    if key in disk:
+        blk = tuple(int(b) for b in disk[key])
+        _memory_cache[key] = blk
+        return blk
+
+    # A warm cache is servable anywhere (the lookups above), but the
+    # SWEEP must not run while a caller's jit trace is active: the
+    # candidate calls would return tracers, `block_until_ready` would
+    # be a no-op, and trace-time noise would be cached as the permanent
+    # winner. Fall back to the deterministic default — uncached, so a
+    # later eager call (`warmup_cache`) can still tune this key. If the
+    # installed jax no longer exposes trace_state_clean, fail CLOSED
+    # (assume a trace may be active): a never-swept cache serves the
+    # safe default, a trace-noise-poisoned cache is permanent.
+    if not getattr(jax.core, "trace_state_clean", lambda: False)():
+        return resolve_blocks(p, r, 128)
+
+    interp = (backend != "tpu") if interpret is None else interpret
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(0), 3)
+    Sigmas = jax.random.normal(k0, (m, p, p), dtype)
+    zs = jax.random.normal(k1, (m, p, r), dtype)
+    cs = jax.random.normal(k2, (m, p, r), dtype)
+    etas = jnp.full((m,), 0.01, dtype)
+
+    best_us, best = float("inf"), None
+    for bp, br, bk in (block_candidates(p, r) if candidates is None
+                       else candidates):
+        fn = lambda: fista_step_batched_pallas(
+            Sigmas, zs, zs, cs, etas, 0.1, 0.5, bp=bp, br=br, bk=bk,
+            interpret=interp)
+        us = _time_candidate(fn, reps)
+        if us < best_us:
+            best_us, best = us, (bp, br, bk)
+
+    _memory_cache[key] = best
+    if use_disk:
+        disk[key] = list(best)
+        _save_disk(disk)
+    return best

@@ -10,6 +10,14 @@ fires on the last k step. Tiles default to 128 (MXU-aligned); the scalars
 `ista_step_batched_pallas` extends the same tiling with a leading task
 grid dimension: all m per-task solves of the DSML hot loop run as one
 pallas call over per-task Sigma tiles and per-task step sizes (SMEM).
+
+`fista_step_batched_pallas` is the engine-v2 variant: the epilogue also
+applies the FISTA momentum extrapolation, emitting BOTH the prox'd
+iterate `x_next` and the look-ahead point `z_next = x_next +
+theta (x_next - x_prev)` from the same VMEM tiles — one kernel dispatch
+and one HBM round trip per FISTA iteration where the two-op path paid a
+kernel plus a separate jnp momentum pass over (m, p, r). The momentum
+coefficient `theta` rides in SMEM next to `etas`/`lam`.
 """
 from __future__ import annotations
 
@@ -64,6 +72,80 @@ def _ista_batched_kernel(eta_lam_ref, sig_ref, beta_ref, beta_tile_ref,
         tau = eta * lam
         out = jnp.sign(z) * jnp.maximum(jnp.abs(z) - tau, 0.0)
         out_ref[0] = out.astype(out_ref.dtype)
+
+
+def _fista_batched_kernel(scal_ref, sig_ref, z_ref, z_tile_ref, x_ref,
+                          c_ref, xn_ref, zn_ref, acc_ref, *, nk: int,
+                          m: int):
+    t = pl.program_id(0)
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(sig_ref[0], z_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        eta = scal_ref[t]               # per-task step size
+        lam = scal_ref[m + t]           # per-task regularization weight
+        theta = scal_ref[2 * m]         # momentum coefficient (t_j-1)/t_{j+1}
+        grad = acc_ref[...] - c_ref[0].astype(jnp.float32)
+        v = z_tile_ref[0].astype(jnp.float32) - eta * grad
+        tau = eta * lam
+        xn = (jnp.sign(v) * jnp.maximum(jnp.abs(v) - tau, 0.0)
+              ).astype(xn_ref.dtype)
+        xn_ref[0] = xn
+        # momentum in the iterate dtype, on the already-cast x_next —
+        # bitwise what the two-op path computes from the kernel output
+        zn_ref[0] = xn + theta.astype(xn.dtype) * (xn - x_ref[0])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bp", "br", "bk", "interpret"))
+def fista_step_batched_pallas(Sigmas, zs, xs, cs, etas, lam, theta, *,
+                              bp: int = 128, br: int = 128, bk: int = 128,
+                              interpret: bool = False):
+    """One fused FISTA iteration for m tasks: prox step at the momentum
+    point `zs` plus the extrapolation against the previous iterate `xs`.
+
+    Sigmas: (m, p, p); zs/xs/cs: (m, p, r); etas: (m,) per-task step
+    sizes; lam scalar or per-task (m,); theta the (traced) scalar
+    momentum coefficient of this iteration. Returns (x_next, z_next),
+    both (m, p, r).
+    """
+    m, p, r = zs.shape
+    bp = min(bp, p)
+    br = min(br, r)
+    bk = min(bk, p)
+    assert p % bp == 0 and r % br == 0 and p % bk == 0, (m, p, r, bp, br, bk)
+    ni, nj, nk = p // bp, r // br, p // bk
+
+    scal = jnp.concatenate(
+        [etas.astype(jnp.float32).reshape(m),
+         jnp.broadcast_to(jnp.asarray(lam, jnp.float32).reshape(-1), (m,)),
+         jnp.asarray(theta, jnp.float32).reshape(1)])
+
+    out = jax.ShapeDtypeStruct((m, p, r), zs.dtype)
+    tile = pl.BlockSpec((1, bp, br), lambda t, i, j, k: (t, i, j))
+    return pl.pallas_call(
+        functools.partial(_fista_batched_kernel, nk=nk, m=m),
+        grid=(m, ni, nj, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # etas ++ lam ++ [theta]
+            pl.BlockSpec((1, bp, bk), lambda t, i, j, k: (t, i, k)),
+            pl.BlockSpec((1, bk, br), lambda t, i, j, k: (t, k, j)),
+            tile,                                   # z (iterate tile)
+            tile,                                   # x_prev
+            tile,                                   # c
+        ],
+        out_specs=(tile, tile),
+        out_shape=(out, out),
+        scratch_shapes=[pltpu.VMEM((bp, br), jnp.float32)],
+        interpret=interpret,
+    )(scal, Sigmas, zs, zs, xs, cs)
 
 
 @functools.partial(jax.jit,

@@ -14,9 +14,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ista_step.kernel import (
-    ista_step_batched_pallas, ista_step_pallas,
+    fista_step_batched_pallas, ista_step_batched_pallas, ista_step_pallas,
 )
-from repro.kernels.ista_step.ref import ista_step_batched_ref, ista_step_ref
+from repro.kernels.ista_step.ref import (
+    fista_step_batched_ref, ista_step_batched_ref, ista_step_ref,
+)
 
 
 def _on_tpu() -> bool:
@@ -28,6 +30,29 @@ def _fit_block(size: int, block: int) -> int:
     while size % b:
         b //= 2
     return b
+
+
+def is_ragged(p: int, r: int) -> bool:
+    """THE kernel routing predicate: shapes the pallas tiling cannot
+    legally cover go to the jnp oracle (which ignores blocks). Shared
+    by the step dispatchers below and the engine's block policy so the
+    two can never desync."""
+    return bool(p % 8 or (r % 8 and r != 1))
+
+
+def resolve_blocks(p: int, r: int, block) -> tuple:
+    """Normalize a block policy to concrete (bp, br, bk) tile sizes.
+
+    `block` is either one int (square bp = bk tiles, the historical
+    policy) or an explicit (bp, br, bk) triple, e.g. an autotuned winner
+    from `repro.kernels.autotune`; each entry is clipped to the largest
+    divisor of its dimension so ragged-adjacent shapes stay legal.
+    """
+    if isinstance(block, tuple):
+        bp, br, bk = block
+    else:
+        bp = br = bk = block
+    return _fit_block(p, bp), _fit_block(r, br), _fit_block(p, bk)
 
 
 def ista_step_batched(Sigmas, betas, cs, etas, lam, *, block: int = 128,
@@ -46,14 +71,39 @@ def ista_step_batched(Sigmas, betas, cs, etas, lam, *, block: int = 128,
         cs = cs[..., None]
     m, p, r = betas.shape
     interp = (not _on_tpu()) if interpret is None else interpret
-    if p % 8 or (r % 8 and r != 1):
+    if is_ragged(p, r):
         out = ista_step_batched_ref(Sigmas, betas, cs, etas, lam)
     else:
-        bp = _fit_block(p, block)
-        br = _fit_block(r, block)
+        bp, br, bk = resolve_blocks(p, r, block)
         out = ista_step_batched_pallas(Sigmas, betas, cs, etas, lam,
-                                       bp=bp, br=br, bk=bp, interpret=interp)
+                                       bp=bp, br=br, bk=bk, interpret=interp)
     return out[..., 0] if squeeze else out
+
+
+def fista_step_batched(Sigmas, zs, xs, cs, etas, lam, theta, *,
+                       block=128, interpret: bool | None = None):
+    """One fused FISTA iteration (prox step + momentum extrapolation)
+    for m tasks. Sigmas (m, p, p); zs/xs/cs (m, p) or (m, p, r); etas
+    (m,); lam scalar or per-task (m,); theta the scalar momentum
+    coefficient. Returns (x_next, z_next).
+
+    Same routing policy as `ista_step_batched`: pallas on MXU-friendly
+    shapes (`block` is an int or an autotuned (bp, br, bk) triple),
+    batched-jnp oracle on ragged shapes, interpret mode off-TPU.
+    """
+    squeeze = zs.ndim == 2
+    if squeeze:
+        zs, xs, cs = zs[..., None], xs[..., None], cs[..., None]
+    m, p, r = zs.shape
+    interp = (not _on_tpu()) if interpret is None else interpret
+    if is_ragged(p, r):
+        xn, zn = fista_step_batched_ref(Sigmas, zs, xs, cs, etas, lam, theta)
+    else:
+        bp, br, bk = resolve_blocks(p, r, block)
+        xn, zn = fista_step_batched_pallas(Sigmas, zs, xs, cs, etas, lam,
+                                           theta, bp=bp, br=br, bk=bk,
+                                           interpret=interp)
+    return (xn[..., 0], zn[..., 0]) if squeeze else (xn, zn)
 
 
 def ista_step(Sigma, beta, c, eta, lam, *, block: int = 128,
@@ -65,7 +115,7 @@ def ista_step(Sigma, beta, c, eta, lam, *, block: int = 128,
         c = c[:, None]
     p, r = beta.shape
     interp = (not _on_tpu()) if interpret is None else interpret
-    if p % 8 or (r % 8 and r != 1):
+    if is_ragged(p, r):
         out = ista_step_ref(Sigma, beta, c, eta, lam)   # ragged fallback
     else:
         bp = _fit_block(p, block)

@@ -36,3 +36,23 @@ def ista_step_batched_ref(Sigmas: jnp.ndarray, betas: jnp.ndarray,
     z = betas - eta * grad
     tau = eta * jnp.asarray(lam, betas.dtype).reshape(-1, 1, 1)
     return jnp.sign(z) * jnp.maximum(jnp.abs(z) - tau, 0.0)
+
+
+def fista_step_batched_ref(Sigmas: jnp.ndarray, zs: jnp.ndarray,
+                           xs: jnp.ndarray, cs: jnp.ndarray,
+                           etas: jnp.ndarray, lam, theta):
+    """Fused FISTA iteration oracle: the ISTA prox step at the momentum
+    point `zs` followed by the extrapolation against the previous
+    iterate `xs`,
+
+        x' = soft(z - eta (Sigma z - c), eta lam)
+        z' = x' + theta (x' - x)
+
+    Same shapes as `ista_step_batched_ref` plus xs (m, p, r) and the
+    scalar momentum coefficient `theta`. Returns (x_next, z_next). The
+    arithmetic is the kernel epilogue's, so the engine's CPU fast path
+    reproduces the two-op (step + jnp momentum) iterates bitwise.
+    """
+    x_next = ista_step_batched_ref(Sigmas, zs, cs, etas, lam)
+    z_next = x_next + jnp.asarray(theta, x_next.dtype) * (x_next - xs)
+    return x_next, z_next

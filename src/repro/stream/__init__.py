@@ -9,7 +9,9 @@ warm starts. `StreamingDsmlService` is the serving driver. DESIGN.md §9.
 from repro.stream.accumulate import (
     accumulate_stats_fn, accumulate_stats_sharded, ingest_sharded,
 )
-from repro.stream.refit import RefitInfo, jaccard_support, refit
+from repro.stream.refit import (
+    RefitInfo, jaccard_support, refit, refit_logistic,
+)
 from repro.stream.service import StreamingDsmlService
 from repro.stream.state import (
     StreamState, WindowState, ingest, ingest_stats, init_stream_state,
@@ -18,7 +20,7 @@ from repro.stream.state import (
 
 __all__ = [
     "accumulate_stats_fn", "accumulate_stats_sharded", "ingest_sharded",
-    "RefitInfo", "jaccard_support", "refit",
+    "RefitInfo", "jaccard_support", "refit", "refit_logistic",
     "StreamingDsmlService",
     "StreamState", "WindowState", "ingest", "ingest_stats",
     "init_stream_state", "init_window", "merge", "window_ingest",

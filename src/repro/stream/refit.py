@@ -23,8 +23,9 @@ import jax.numpy as jnp
 
 from repro.core.engine import (
     debias_batched, inverse_hessian_batched, power_iteration_batched,
-    scaled_identity_m0, solve_lasso_eq2,
+    scaled_identity_m0, solve_lasso_eq2, solve_logistic_lasso_batched,
 )
+from repro.core.logistic import debias_logistic_batched
 from repro.core.prox import support_from_rows
 from repro.stream.state import StreamState
 
@@ -68,6 +69,45 @@ def refit(state: StreamState, lam, mu, Lam, lasso_iters: int = 400,
     Ms = inverse_hessian_batched(state.Sigmas, mu, iters=debias_iters,
                                  M0=M0, lam_max=lam_max)
     beta_u = debias_batched(state.Sigmas, state.cs, beta_hat, Ms)
+    support = support_from_rows(beta_u.T, Lam)
+    beta_tilde = beta_u * support[None, :]
+    new_state = state._replace(
+        beta_local=beta_hat, Ms=Ms, beta_u=beta_u, beta_tilde=beta_tilde,
+        support=support, generation=state.generation + 1)
+    info = RefitInfo(
+        jaccard=jaccard_support(support, state.support).astype(state.cs.dtype),
+        support_size=jnp.sum(support).astype(jnp.int32),
+        generation=new_state.generation)
+    return new_state, info
+
+
+@partial(jax.jit, static_argnames=("lasso_iters", "debias_iters", "warm"))
+def refit_logistic(state: StreamState, Xs: jnp.ndarray, ys: jnp.ndarray,
+                   lam, mu, Lam, lasso_iters: int = 600,
+                   debias_iters: int = 600,
+                   warm: bool = True) -> Tuple[StreamState, RefitInfo]:
+    """One Section-4 (classification) DSML refresh, warm-started from
+    the previous generation exactly like the regression `refit`.
+
+    The logistic loss is not a function of the state's `(Sigma, c)`
+    statistics, so the gradient re-touches a retained raw window
+    `Xs (m, n, p)` / `ys (m, n) in {-1, +1}` — but the state still
+    carries everything that makes consecutive refits cheap: with
+    `warm=True` the batched l1-logistic solve restarts from
+    `beta_local` and the weighted-Hessian debias solve from the
+    previous `Ms` (generation 0 falls back to the engine's
+    scaled-identity start, selected under jit via the traced
+    generation). The state's regression statistics fields are left
+    untouched; the model fields (`beta_local`, `Ms`, `beta_u`,
+    `beta_tilde`, `support`, `generation`) advance one generation.
+    """
+    beta0 = state.beta_local if warm else None
+    beta_hat = solve_logistic_lasso_batched(Xs, ys, lam, iters=lasso_iters,
+                                            beta0=beta0)
+    beta_u, Ms = debias_logistic_batched(
+        Xs, ys, beta_hat, mu, iters=debias_iters,
+        M0=state.Ms if warm else None,
+        M0_valid=(state.generation > 0) if warm else None)
     support = support_from_rows(beta_u.T, Lam)
     beta_tilde = beta_u * support[None, :]
     new_state = state._replace(

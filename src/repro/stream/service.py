@@ -83,6 +83,10 @@ class StreamingDsmlService:
         self.max_refit_interval = max_refit_interval \
             if max_refit_interval is not None else 16 * refit_every
         self.mesh, self.data_axis, self.task_axis = mesh, data_axis, task_axis
+        # warm the kernel block-size cache for this workload's solve
+        # shapes before any jitted refit traces (no-op off-TPU)
+        from repro.kernels.autotune import warmup_cache
+        warmup_cache(m, p, dtype=dtype)
         self.state = init_stream_state(m, p, dtype)
         self.window = init_window(window, m, p, dtype) if window else None
         self._interval = refit_every
