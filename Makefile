@@ -3,11 +3,21 @@ PY ?= python
 # benchmarks.paper_common)
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
-.PHONY: test test-cpu8 bench-smoke bench-json check-regression \
-	bench-stream-smoke smoke-examples
+.PHONY: test test-stats test-cpu8 bench-smoke bench-json \
+	check-regression bench-stream-smoke smoke-examples
 
+# default flow: the full pytest suite (which includes the statistical
+# tier below) plus the perf-floor gate on the committed bench JSON
 test:
 	$(PY) -m pytest -q
+	$(PY) benchmarks/check_regression.py
+
+# statistical correctness tier alone: the paper's claims (exact support
+# recovery, debiased error vs the centralized oracle) plus the golden
+# figure-driver smoke points
+test-stats:
+	$(PY) -m pytest -q tests/test_statistical_recovery.py \
+	    tests/test_figures_smoke.py
 
 # sharded DSML / SPMD paths with 8 forced host devices (the in-test
 # subprocess probes force their own device count; this job exercises the
@@ -21,6 +31,7 @@ bench-smoke:
 	$(PY) benchmarks/kernels_bench.py
 	$(PY) benchmarks/communication.py
 	$(PY) benchmarks/fig1_regression.py --smoke
+	$(PY) benchmarks/fig2_classification.py --smoke
 
 # machine-readable kernel bench rows, tracked across PRs; the committed
 # BENCH_kernels.json is the perf baseline check-regression gates on

@@ -37,6 +37,8 @@ FLOORS = (
     ("kernel_ista_batched_fused_over_vmap", 1.0),
     ("kernel_fista_fused_over_two_op", 0.85),
     ("logistic_solve_batched_over_vmap", 0.85),
+    ("logistic_grad_fused_over_unfused", 0.85),
+    ("rank_update_fused_over_unfused", 0.85),
 )
 
 

@@ -24,14 +24,22 @@ from repro.core import gen_regression
 P, S_TRUE = 200, 10
 
 
-def sweep(n_runs: int = 10, *, iters: int = 400):
+VARY_N = (30, 50, 80, 120)
+VARY_M = (2, 5, 10, 20)
+
+
+def sweep(n_runs: int = 10, *, iters: int = 400, vary_n=VARY_N,
+          vary_m=VARY_M):
+    """`vary_n` / `vary_m` select the sweep points (paper defaults);
+    the golden smoke test drives one point per sweep through this exact
+    code path."""
     results = {"vary_n": {}, "vary_m": {}}
-    for n in (30, 50, 80, 120):
+    for n in vary_n:
         results["vary_n"][n] = average_runs(
             lambda key: eval_regression_methods(
                 gen_regression(key, m=10, n=n, p=P, s=S_TRUE), iters=iters),
             n_runs)
-    for m in (2, 5, 10, 20):
+    for m in vary_m:
         results["vary_m"][m] = average_runs(
             lambda key: eval_regression_methods(
                 gen_regression(key, m=m, n=50, p=P, s=S_TRUE), iters=iters),
@@ -40,9 +48,9 @@ def sweep(n_runs: int = 10, *, iters: int = 400):
 
 
 def main(n_runs: int = 10, out_dir: str = "experiments/paper", *,
-         iters: int = 400):
+         iters: int = 400, vary_n=VARY_N, vary_m=VARY_M):
     t0 = time.time()
-    results = sweep(n_runs, iters=iters)
+    results = sweep(n_runs, iters=iters, vary_n=vary_n, vary_m=vary_m)
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "fig1_regression.json"), "w") as f:
         json.dump(results, f, indent=2)

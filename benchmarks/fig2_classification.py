@@ -3,9 +3,13 @@
 Top row:    m=10 fixed, n varied.
 Bottom row: n=150 fixed, m varied.
 Prediction error is the held-out 0/1 error (fresh data per run).
+
+`--smoke` shrinks the sweep to one run per point with a reduced
+iteration budget (the CI bench job and the golden smoke test use it).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -16,31 +20,38 @@ from benchmarks.paper_common import average_runs, eval_classification_methods
 from repro.core import gen_classification
 
 P, S_TRUE = 200, 10
+VARY_N = (80, 150, 250)
+VARY_M = (3, 10, 20)
 
 
-def _one(key, m, n):
+def _one(key, m, n, iters):
     k1, k2 = jax.random.split(key)
     data = gen_classification(k1, m=m, n=n, p=P, s=S_TRUE)
     test = gen_classification(k2, m=m, n=500, p=P, s=S_TRUE)
     test = test._replace(ys=jax.numpy.sign(
         jax.numpy.einsum("tnp,pt->tn", test.Xs, data.B)))
-    return eval_classification_methods(data, test)
+    return eval_classification_methods(data, test, iters=iters)
 
 
-def sweep(n_runs: int = 8):
+def sweep(n_runs: int = 8, *, iters: int = 500, vary_n=VARY_N,
+          vary_m=VARY_M):
+    """`vary_n` / `vary_m` select the sweep points (paper defaults);
+    the golden smoke test drives one point per sweep through this exact
+    code path."""
     results = {"vary_n": {}, "vary_m": {}}
-    for n in (80, 150, 250):
+    for n in vary_n:
         results["vary_n"][n] = average_runs(
-            lambda key: _one(key, 10, n), n_runs)
-    for m in (3, 10, 20):
+            lambda key: _one(key, 10, n, iters), n_runs)
+    for m in vary_m:
         results["vary_m"][m] = average_runs(
-            lambda key: _one(key, m, 150), n_runs)
+            lambda key: _one(key, m, 150, iters), n_runs)
     return results
 
 
-def main(n_runs: int = 8, out_dir: str = "experiments/paper"):
+def main(n_runs: int = 8, out_dir: str = "experiments/paper", *,
+         iters: int = 500, vary_n=VARY_N, vary_m=VARY_M):
     t0 = time.time()
-    results = sweep(n_runs)
+    results = sweep(n_runs, iters=iters, vary_n=vary_n, vary_m=vary_m)
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "fig2_classification.json"), "w") as f:
         json.dump(results, f, indent=2)
@@ -58,5 +69,11 @@ def main(n_runs: int = 8, out_dir: str = "experiments/paper"):
 
 
 if __name__ == "__main__":
-    for r in main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 run per point with a reduced iteration budget")
+    args = ap.parse_args()
+    n_runs = 1 if args.smoke else args.runs
+    for r in main(n_runs, iters=250 if args.smoke else 500):
         print(r)

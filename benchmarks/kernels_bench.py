@@ -17,6 +17,10 @@ from repro.kernels.ista_step.ops import (
     fista_step_batched, ista_step, ista_step_batched,
 )
 from repro.kernels.ista_step.ref import ista_step_batched_ref, ista_step_ref
+from repro.kernels.logistic_grad.ops import logistic_grad, logistic_grad_unfused
+from repro.kernels.logistic_grad.ref import logistic_grad_ref
+from repro.kernels.rank_update.ops import rank_update, rank_update_unfused
+from repro.kernels.rank_update.ref import rank_update_ref
 
 
 def _interleaved_pair(fa, fb, *args, reps: int = 2, rounds: int = 5):
@@ -122,6 +126,53 @@ def main():
     rows.append(f"logistic_solve_vmap_m16_p512,{us_v:.0f},flops={flops_log}")
     rows.append(f"logistic_solve_batched_over_vmap,{us_b:.0f},"
                 f"speedup={r_bv:.2f}x")
+
+    # fused logistic-gradient kernel (engine hot path for every
+    # Section-4 solve): one dispatch computing X@b, the sigmoid
+    # residual, and the X'r back-projection from the same resident
+    # tiles, vs the unfused two-dispatch pallas pair (forward matvec
+    # kernel + jnp residual + back-projection kernel), both interpret
+    # mode; the XLA einsum oracle (the engine's CPU fast path) for
+    # context
+    n_g = 128
+    Xg = jax.random.normal(jax.random.PRNGKey(7), (m, n_g, p))
+    yg = jnp.sign(jax.random.normal(jax.random.PRNGKey(8), (m, n_g)))
+    Bg = jax.random.normal(jax.random.PRNGKey(9), (m, p)) * 0.1
+    g_fused = jax.jit(lambda X, y, b: logistic_grad(X, y, b, interpret=True))
+    g_unfused = jax.jit(lambda X, y, b: logistic_grad_unfused(
+        X, y, b, interpret=True))
+    g_ref = jax.jit(logistic_grad_ref)
+    us_gf, us_gu, r_gu = _interleaved_pair(g_fused, g_unfused, Xg, yg, Bg)
+    us_gr = _time(g_ref, Xg, yg, Bg)
+    flops_g = 4 * m * n_g * p          # fwd + bwd matvec
+    rows.append(f"logistic_grad_fused_m16_p512,{us_gf:.0f},flops={flops_g}")
+    rows.append(f"logistic_grad_unfused_m16_p512,{us_gu:.0f},flops={flops_g}")
+    rows.append(f"logistic_grad_xla_ref_m16_p512,{us_gr:.0f},flops={flops_g}")
+    rows.append(f"logistic_grad_fused_over_unfused,{us_gf:.0f},"
+                f"speedup={r_gu:.2f}x")
+
+    # fused rank-n statistics update (streaming ingest hot path): Sigma
+    # and c from ONE pass over the sample chunk vs the unfused
+    # two-dispatch pair (covariance kernel + correlation kernel, X
+    # streamed twice), interpret mode; XLA einsum oracle for context
+    m_r, n_r, p_r = 8, 512, 256
+    Xr = jax.random.normal(jax.random.PRNGKey(10), (m_r, n_r, p_r))
+    yr = jax.random.normal(jax.random.PRNGKey(11), (m_r, n_r))
+    r_fused = jax.jit(lambda X, y: rank_update(X, y, interpret=True,
+                                               use_kernel=True))
+    r_unfused = jax.jit(lambda X, y: rank_update_unfused(X, y,
+                                                         interpret=True))
+    r_ref = jax.jit(lambda X, y: rank_update_ref(X, y))
+    us_rf, us_ru, r_ru = _interleaved_pair(r_fused, r_unfused, Xr, yr)
+    us_rr = _time(r_ref, Xr, yr)
+    flops_r = 2 * m_r * n_r * p_r * (p_r + 1)
+    rows.append(f"rank_update_fused_m8_n512_p256,{us_rf:.0f},flops={flops_r}")
+    rows.append(f"rank_update_unfused_m8_n512_p256,{us_ru:.0f},"
+                f"flops={flops_r}")
+    rows.append(f"rank_update_xla_ref_m8_n512_p256,{us_rr:.0f},"
+                f"flops={flops_r}")
+    rows.append(f"rank_update_fused_over_unfused,{us_rf:.0f},"
+                f"speedup={r_ru:.2f}x")
 
     # streaming ingest: the always-on rank-n update of the stream layer
     # (one chunk of m=16 tasks x n=1024 rows into p=256 running stats)

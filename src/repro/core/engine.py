@@ -28,7 +28,16 @@ kernel block policy defaults to the autotuned winner for the shape
 (`kernels/autotune.py`; explicit `block=` wins), and
 `solve_logistic_lasso_batched` extends the batched loop to the
 Section-4 logistic path — every task's l1-logistic solve as one
-all-tasks einsum gradient instead of a vmap of per-task FISTA loops.
+all-tasks gradient instead of a vmap of per-task FISTA loops.
+
+The sample-streaming hot paths are fused too (DESIGN.md §11): the
+logistic gradient runs as the `kernels/logistic_grad` Pallas kernel
+(forward matvec, sigmoid residual, and back-projection from the same
+resident X tiles) and `sufficient_stats` as the `kernels/rank_update`
+kernel (Sigma and c from one pass over the chunk) — both behind the
+standard dispatch convention: kernel by default on TPU, bitwise jnp
+oracle as the fast CPU path and the ragged-shape fallback, autotuned
+default block sizes under their own `kernels/autotune.py` namespaces.
 """
 from __future__ import annotations
 
@@ -44,6 +53,10 @@ from repro.kernels.ista_step.ops import fista_step_batched
 from repro.kernels.ista_step.ref import (
     fista_step_batched_ref, ista_step_batched_ref,
 )
+from repro.kernels.common import is_ragged_samples
+from repro.kernels.logistic_grad.ops import logistic_grad, routes_to_oracle
+from repro.kernels.logistic_grad.ref import logistic_grad_ref
+from repro.kernels.rank_update.ops import rank_update
 
 
 def power_iteration_batched(Sigmas: jnp.ndarray, iters: int = 64) -> jnp.ndarray:
@@ -51,10 +64,11 @@ def power_iteration_batched(Sigmas: jnp.ndarray, iters: int = 64) -> jnp.ndarray
     return jax.vmap(partial(power_iteration, iters=iters))(Sigmas)
 
 
-@jax.jit
 def sufficient_stats(Xs: jnp.ndarray, ys: jnp.ndarray,
-                     weights: jnp.ndarray | None = None
-                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                     weights: jnp.ndarray | None = None, *,
+                     use_kernel: bool | None = None,
+                     interpret: bool | None = None,
+                     block=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-task empirical covariance and correlation.
 
     Xs: (m, n, p), ys: (m, n) -> Sigmas (m, p, p), cs (m, p). These two
@@ -65,12 +79,20 @@ def sufficient_stats(Xs: jnp.ndarray, ys: jnp.ndarray,
     by n: Sigma_w = n^-1 X' W X, c_w = n^-1 X' W y. This is the one code
     path behind both the logistic debias Hessian (W = sigma(z)sigma(-z))
     and the streaming layer's per-sample importance weighting.
+
+    The reduction is the fused rank-n Pallas kernel
+    (`kernels/rank_update`: Sigma and c from ONE pass over the sample
+    chunk) when `use_kernel` — default only on TPU; the jnp einsum
+    oracle is the fast CPU path and the ragged-shape fallback. `block`
+    is an int, an explicit (bp, bn) pair, or None for the autotuned
+    per-shape policy (DESIGN.md §11).
     """
-    n = Xs.shape[1]
-    Xl = Xs if weights is None else Xs * weights[..., None]
-    Sigmas = jnp.einsum("tni,tnj->tij", Xl, Xs) / n
-    cs = jnp.einsum("tni,tn->ti", Xl, ys) / n
-    return Sigmas, cs
+    m, n, p = Xs.shape
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    block = resolve_rank_block_policy(m, n, p, Xs.dtype, block, use_kernel)
+    return rank_update(Xs, ys, weights, use_kernel=use_kernel,
+                       interpret=interpret, block=block)
 
 
 def _fista_loop(body, init, iters, tol, check_every, residual):
@@ -116,6 +138,33 @@ def resolve_block_policy(m: int, p: int, r: int, dtype, block,
         return 128
     from repro.kernels.autotune import autotune_block
     return autotune_block(m, p, r, dtype=dtype)
+
+
+def resolve_logistic_block_policy(m: int, n: int, p: int, dtype, block,
+                                  use_kernel: bool):
+    """Block policy for the fused logistic-gradient kernel: an explicit
+    `block` (int bn) wins; otherwise the autotuned winner for
+    (backend, m, n, p, dtype) when the kernel path is active. Same
+    shape-routing caveats as `resolve_block_policy`."""
+    if block is not None:
+        return block
+    if not use_kernel or routes_to_oracle(n, p):
+        return 128
+    from repro.kernels.autotune import autotune_logistic_block
+    return autotune_logistic_block(m, n, p, dtype=dtype)
+
+
+def resolve_rank_block_policy(m: int, n: int, p: int, dtype, block,
+                              use_kernel: bool):
+    """Block policy for the fused rank-n update kernel: an explicit
+    `block` (int or (bp, bn) pair) wins; otherwise the autotuned winner
+    for (backend, m, n, p, dtype) when the kernel path is active."""
+    if block is not None:
+        return block
+    if not use_kernel or is_ragged_samples(n, p):
+        return 128
+    from repro.kernels.autotune import autotune_rank_block
+    return autotune_rank_block(m, n, p, dtype=dtype)
 
 
 def solve_lasso_batched(Sigmas: jnp.ndarray, cs: jnp.ndarray, lam, *,
@@ -270,8 +319,6 @@ def solve_lasso_eq2_grid(Sigmas: jnp.ndarray, cs: jnp.ndarray, lams, *,
                             iters=iters, etas=etas)
 
 
-@partial(jax.jit, static_argnames=("iters", "momentum", "prox",
-                                   "check_every", "return_iters"))
 def solve_logistic_lasso_batched(Xs: jnp.ndarray, ys: jnp.ndarray, lam, *,
                                  iters: int = 600,
                                  etas: jnp.ndarray | None = None,
@@ -279,16 +326,25 @@ def solve_logistic_lasso_batched(Xs: jnp.ndarray, ys: jnp.ndarray, lam, *,
                                  grad_scale=1.0, prox=None,
                                  momentum: bool = True, tol=None,
                                  check_every: int = 25,
+                                 use_kernel: bool | None = None,
+                                 interpret: bool | None = None,
+                                 block=None,
                                  return_iters: bool = False):
     """One FISTA loop for a whole batch of l1-logistic regressions.
 
     Xs (m, n, p), ys (m, n) in {-1, +1}; lam scalar or per-task (m,).
     Returns B (m, p). The logistic loss is not a function of (Sigma, c)
     alone, so the gradient re-touches the raw samples — but as ONE
-    all-tasks einsum `-X'(y sigmoid(-y Xb))/n` per iteration instead of
-    a vmap of m per-task FISTA loops, with per-task step sizes
+    all-tasks gradient `-X'(y sigmoid(-y Xb))/n` per iteration instead
+    of a vmap of m per-task FISTA loops, with per-task step sizes
     `1 / max(lambda_max(Sigma)/4, eps)` from one shared batched power
-    iteration (the logistic Hessian is bounded by Sigma/4).
+    iteration (the logistic Hessian is bounded by Sigma/4). On the
+    kernel path (`use_kernel`, default only on TPU) the gradient is the
+    fused Pallas `kernels/logistic_grad` kernel — forward matvec,
+    sigmoid residual, and back-projection in one dispatch over each
+    resident X tile; otherwise it is the bitwise-identical jnp einsum
+    oracle (the fast CPU path). `block` is an int sample tile bn or
+    None for the autotuned per-shape policy (DESIGN.md §11).
 
     `beta0` (m, p) warm-starts the iterates (streaming refits restart
     from the previous generation). `prox` overrides the elementwise
@@ -305,6 +361,25 @@ def solve_logistic_lasso_batched(Xs: jnp.ndarray, ys: jnp.ndarray, lam, *,
     `return_iters` also returns the iterations run.
     """
     m, n, p = Xs.shape
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    block = resolve_logistic_block_policy(m, n, p, Xs.dtype, block,
+                                          use_kernel)
+    out, n_iters = _solve_logistic_lasso_batched(
+        Xs, ys, lam, etas, beta0, grad_scale, tol, iters=iters, prox=prox,
+        momentum=momentum, check_every=check_every, use_kernel=use_kernel,
+        interpret=interpret, block=block)
+    return (out, n_iters) if return_iters else out
+
+
+@partial(jax.jit, static_argnames=("iters", "momentum", "prox",
+                                   "check_every", "use_kernel",
+                                   "interpret", "block"))
+def _solve_logistic_lasso_batched(Xs, ys, lam, etas, beta0, grad_scale,
+                                  tol, *, iters, prox, momentum,
+                                  check_every, use_kernel, interpret,
+                                  block):
+    m, n, p = Xs.shape
     lam_t = jnp.broadcast_to(jnp.asarray(lam, Xs.dtype).reshape(-1), (m,))
     if etas is None:
         Sigmas, _ = sufficient_stats(Xs, ys)
@@ -313,11 +388,12 @@ def solve_logistic_lasso_batched(Xs: jnp.ndarray, ys: jnp.ndarray, lam, *,
     S = jnp.broadcast_to(jnp.asarray(etas, Xs.dtype).reshape(-1),
                          (m,))[:, None]
 
-    def grad(B):
-        z = jnp.einsum("tnp,tp->tn", Xs, B)
-        g = -jnp.einsum("tnp,tn->tp", Xs,
-                        ys * jax.nn.sigmoid(-ys * z)) / n
-        return g * grad_scale
+    if use_kernel:
+        graw = lambda B: logistic_grad(Xs, ys, B, block=block,
+                                       interpret=interpret)
+    else:
+        graw = lambda B: logistic_grad_ref(Xs, ys, B)
+    grad = lambda B: graw(B) * grad_scale
 
     if prox is None:
         prox = lambda V, steps: soft_threshold(V, steps * lam_t[:, None])
@@ -336,9 +412,8 @@ def solve_logistic_lasso_batched(Xs: jnp.ndarray, ys: jnp.ndarray, lam, *,
     def residual(x):
         return jnp.max(jnp.abs(prox(x - S * grad(x), S) - x))
 
-    x, n_iters = _fista_loop(body, (X0, X0, jnp.array(1.0, Xs.dtype)),
-                             iters, tol, check_every, residual)
-    return (x, n_iters) if return_iters else x
+    return _fista_loop(body, (X0, X0, jnp.array(1.0, Xs.dtype)),
+                       iters, tol, check_every, residual)
 
 
 def debias_batched(Sigmas: jnp.ndarray, cs: jnp.ndarray,

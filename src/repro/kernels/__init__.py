@@ -3,5 +3,6 @@
 # kernel. Leave this package empty if the paper has none.
 #
 # kernels/autotune.py is the shared block-size policy for the batched
-# solver kernels: per-(backend, m, p, r, dtype) winners, cached
-# in-process and under the repo cache dir (DESIGN.md §10).
+# solver kernels: per-kernel-namespaced (backend, dims, dtype) winners
+# (fista_step/, logistic_grad/, rank_update/), cached in-process and
+# under the repo cache dir (DESIGN.md §10-§11).

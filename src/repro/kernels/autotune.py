@@ -1,17 +1,29 @@
-"""Block-size autotuning for the batched ISTA/FISTA Pallas kernels.
+"""Block-size autotuning for the batched Pallas solver kernels.
 
-The fused solver step is shape-polymorphic over (m, p, r) and its best
-(bp, br, bk) tiling depends on the backend and dtype: the 128x128 MXU
-default is right for large square solves, but small-m/multi-RHS debias
-solves and skinny r=1 lasso batches favour other tiles. `autotune_block`
-times the candidate tilings for a given problem key once, then serves
-the winner from an in-process cache backed by a JSON file under the repo
-cache dir (`.cache/autotune.json`, override with $REPRO_CACHE_DIR), so a
-process restart never re-times a known key.
+Three kernel families are shape-polymorphic over their problem sizes
+and their best tilings depend on the backend and dtype:
 
-The engine (`core/engine.py`) uses this as its default block policy:
-`solve_lasso_batched(block=None)` on the kernel path looks the winner up
-here; an explicit `block=` always wins and never touches the cache.
+  * `fista_step` — the fused ISTA/FISTA solver step, swept over
+    (bp, br, bk) for a (m, p, r) solve;
+  * `logistic_grad` — the fused all-tasks logistic gradient, swept over
+    the sample tile bn for a (m, n, p) batch;
+  * `rank_update` — the fused rank-n sufficient-statistics update,
+    swept over (bp, bn) for a (m, n, p) chunk.
+
+Each `autotune_*` entry point times the candidate tilings for a given
+problem key once, then serves the winner from an in-process cache
+backed by a JSON file under the repo cache dir (`.cache/autotune.json`,
+override with $REPRO_CACHE_DIR), so a process restart never re-times a
+known key. Cache keys are NAMESPACED PER KERNEL
+(`"<kernel>/<backend>_<dims>_<dtype>"`); legacy un-namespaced entries
+(pre-namespace files were written only by the fista sweep) are migrated
+to `fista_step/...` on load.
+
+The engine (`core/engine.py`) uses these as its default block policies:
+`solve_lasso_batched(block=None)` / `solve_logistic_lasso_batched
+(block=None)` / `sufficient_stats(block=None)` on the kernel path look
+the winner up here; an explicit `block=` always wins and never touches
+the cache.
 """
 from __future__ import annotations
 
@@ -19,13 +31,15 @@ import json
 import os
 import time
 from pathlib import Path
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.ista_step.kernel import fista_step_batched_pallas
 from repro.kernels.ista_step.ops import resolve_blocks
+from repro.kernels.logistic_grad.kernel import logistic_grad_pallas
+from repro.kernels.rank_update.kernel import rank_update_pallas
 
 _REPO_ROOT = Path(__file__).resolve().parents[3]
 CACHE_FILE = "autotune.json"
@@ -34,7 +48,7 @@ CACHE_FILE = "autotune.json"
 # actual dimension, so every candidate is a legal BlockSpec tiling
 BLOCK_CANDIDATES = (32, 64, 128, 256)
 
-_memory_cache: Dict[str, Tuple[int, int, int]] = {}
+_memory_cache: Dict[str, tuple] = {}
 
 
 def cache_path() -> Path:
@@ -42,20 +56,43 @@ def cache_path() -> Path:
                                _REPO_ROOT / ".cache")) / CACHE_FILE
 
 
-def cache_key(backend: str, m: int, p: int, r: int, dtype) -> str:
-    return f"{backend}_m{m}_p{p}_r{r}_{jnp.dtype(dtype).name}"
+def cache_key(kernel: str, backend: str, dims: Dict[str, int],
+              dtype) -> str:
+    """Per-kernel-namespaced key: "<kernel>/<backend>_m4_p128_..._f32".
+    Entries for different kernels can never collide even when their
+    dimension tuples coincide (e.g. a (m, n, p) logistic sweep vs a
+    (m, p, r) solver sweep with equal numbers)."""
+    dim_s = "_".join(f"{k}{v}" for k, v in dims.items())
+    return f"{kernel}/{backend}_{dim_s}_{jnp.dtype(dtype).name}"
 
 
 def clear_memory_cache() -> None:
     _memory_cache.clear()
 
 
+def _migrate(entries: dict) -> Tuple[dict, bool]:
+    """Namespace legacy keys. Files written before the per-kernel
+    namespace held only fista sweeps under bare "<backend>_..." keys;
+    prefix them so old caches keep serving (and never shadow or absorb
+    the new kernels' entries)."""
+    migrated, changed = {}, False
+    for k, v in entries.items():
+        if "/" not in k:
+            k, changed = f"fista_step/{k}", True
+        migrated[k] = v
+    return migrated, changed
+
+
 def _load_disk() -> dict:
     try:
         with open(cache_path()) as f:
-            return json.load(f)
+            entries = json.load(f)
     except (OSError, ValueError):
         return {}
+    entries, changed = _migrate(entries)
+    if changed:
+        _save_disk(entries)      # rewrite once; best-effort if read-only
+    return entries
 
 
 def _save_disk(entries: dict) -> None:
@@ -69,16 +106,30 @@ def _save_disk(entries: dict) -> None:
         pass  # read-only checkout: the in-process cache still serves
 
 
+def _divisor_candidates(size: int) -> List[int]:
+    return [b for b in BLOCK_CANDIDATES if b <= size and size % b == 0] \
+        or [size]
+
+
 def block_candidates(p: int, r: int) -> List[Tuple[int, int, int]]:
     """Legal (bp, br, bk) tilings to sweep for a (p, r) solve. bk is
     tied to bp (the contraction tile streams the same Sigma rows the
     output tile covers), so the sweep is |bp| x |br| candidates."""
-    bps = [b for b in BLOCK_CANDIDATES if b <= p and p % b == 0] or [p]
-    if r == 1:
-        brs = [1]
-    else:
-        brs = [b for b in BLOCK_CANDIDATES if b <= r and r % b == 0] or [r]
+    bps = _divisor_candidates(p)
+    brs = [1] if r == 1 else _divisor_candidates(r)
     return [(bp, br, bp) for bp in bps for br in brs]
+
+
+def logistic_candidates(n: int) -> List[int]:
+    """Legal sample tiles bn to sweep for a (m, n, p) logistic-gradient
+    batch (the feature axis rides whole in the lane dimension)."""
+    return _divisor_candidates(n)
+
+
+def rank_candidates(n: int, p: int) -> List[Tuple[int, int]]:
+    """Legal (bp, bn) tilings to sweep for a (m, n, p) rank-n update."""
+    return [(bp, bn) for bp in _divisor_candidates(p)
+            for bn in _divisor_candidates(n)]
 
 
 def _time_candidate(fn, reps: int) -> float:
@@ -94,53 +145,32 @@ def _time_candidate(fn, reps: int) -> float:
     return best * 1e6
 
 
-def warmup_cache(m: int, p: int, *, dtype=jnp.float32,
-                 reps: int = 2) -> None:
-    """Eagerly tune the two solve shapes a DSML workload of m tasks in
-    p dims hits — the r=1 lasso batch and the r=p multi-RHS debias
-    solve — so later JITTED engine calls find a warm cache.
+def _autotune(kernel: str, dims: Dict[str, int], default, candidates,
+              make_sweep: Callable, *, dtype, backend: str | None,
+              interpret: bool | None, reps: int, use_disk: bool):
+    """Shared cache-then-sweep policy behind every `autotune_*` entry
+    point. `make_sweep(interp)` builds the synthetic sweep inputs and
+    returns a `candidate -> timing thunk` factory — called only when a
+    sweep actually runs, so warm-cache hits on the engine hot path
+    never pay a problem-sized allocation. The winner is written back to
+    both caches.
 
-    This is the intended production entry point: every in-repo solver
-    is jitted, and the sweep refuses to run under an active trace
-    (see `autotune_block`), so without an eager warm-up the engine
-    keeps the deterministic 128 default. Call once at startup
-    (`StreamingDsmlService` does, on TPU). No-op off-TPU, where the
-    engine's default path is the jnp oracle and a sweep would time the
-    slow interpreter for nothing.
-    """
-    if jax.default_backend() != "tpu":
-        return
-    autotune_block(m, p, 1, dtype=dtype, reps=reps)
-    autotune_block(m, p, p, dtype=dtype, reps=reps)
-
-
-def autotune_block(m: int, p: int, r: int, *, dtype=jnp.float32,
-                   backend: str | None = None,
-                   interpret: bool | None = None,
-                   candidates: List[Tuple[int, int, int]] | None = None,
-                   reps: int = 2, use_disk: bool = True
-                   ) -> Tuple[int, int, int]:
-    """Winning (bp, br, bk) tiling for a batched solve of this shape.
-
-    Cache policy: in-process dict first, then the on-disk JSON, then a
-    timing sweep of `candidates` (default `block_candidates(p, r)`) on
-    synthetic data whose winner is written back to both caches.
-
-    Multi-controller guard: the winner becomes a STATIC compile
+    Multi-controller guard: a winner becomes a STATIC compile
     parameter, and a timing sweep is not deterministic across hosts —
     divergent winners would compile divergent executables for one SPMD
-    program. With more than one jax process every host returns the
-    same deterministic default instead of sweeping.
+    program. With more than one jax process every host returns the same
+    deterministic default instead of sweeping.
     """
     if jax.process_count() > 1:
-        return resolve_blocks(p, r, 128)    # historical default, no sweep
+        return default
     backend = jax.default_backend() if backend is None else backend
-    key = cache_key(backend, m, p, r, dtype)
+    key = cache_key(kernel, backend, dims, dtype)
     if key in _memory_cache:
         return _memory_cache[key]
     disk = _load_disk() if use_disk else {}
     if key in disk:
-        blk = tuple(int(b) for b in disk[key])
+        v = disk[key]
+        blk = tuple(int(b) for b in v) if isinstance(v, list) else int(v)
         _memory_cache[key] = blk
         return blk
 
@@ -154,27 +184,116 @@ def autotune_block(m: int, p: int, r: int, *, dtype=jnp.float32,
     # (assume a trace may be active): a never-swept cache serves the
     # safe default, a trace-noise-poisoned cache is permanent.
     if not getattr(jax.core, "trace_state_clean", lambda: False)():
-        return resolve_blocks(p, r, 128)
+        return default
 
     interp = (backend != "tpu") if interpret is None else interpret
-    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(0), 3)
-    Sigmas = jax.random.normal(k0, (m, p, p), dtype)
-    zs = jax.random.normal(k1, (m, p, r), dtype)
-    cs = jax.random.normal(k2, (m, p, r), dtype)
-    etas = jnp.full((m,), 0.01, dtype)
-
-    best_us, best = float("inf"), None
-    for bp, br, bk in (block_candidates(p, r) if candidates is None
-                       else candidates):
-        fn = lambda: fista_step_batched_pallas(
-            Sigmas, zs, zs, cs, etas, 0.1, 0.5, bp=bp, br=br, bk=bk,
-            interpret=interp)
-        us = _time_candidate(fn, reps)
+    fn_for = make_sweep(interp)
+    best_us, best = float("inf"), default
+    for cand in candidates:
+        us = _time_candidate(fn_for(cand), reps)
         if us < best_us:
-            best_us, best = us, (bp, br, bk)
-
+            best_us, best = us, cand
     _memory_cache[key] = best
     if use_disk:
-        disk[key] = list(best)
+        disk[key] = list(best) if isinstance(best, tuple) else best
         _save_disk(disk)
     return best
+
+
+def warmup_cache(m: int, p: int, n: int | None = None, *,
+                 dtype=jnp.float32, reps: int = 2) -> None:
+    """Eagerly tune the solve shapes a DSML workload of m tasks in p
+    dims hits — the r=1 lasso batch and the r=p multi-RHS debias solve,
+    plus (when the chunk size `n` is known) the rank-n ingest and
+    logistic-gradient shapes — so later JITTED engine calls find a warm
+    cache.
+
+    This is the intended production entry point: every in-repo solver
+    is jitted, and the sweep refuses to run under an active trace
+    (see `_autotune`), so without an eager warm-up the engine keeps the
+    deterministic 128 default. Call once at startup
+    (`StreamingDsmlService` does, on TPU). No-op off-TPU, where the
+    engine's default path is the jnp oracle and a sweep would time the
+    slow interpreter for nothing.
+    """
+    if jax.default_backend() != "tpu":
+        return
+    autotune_block(m, p, 1, dtype=dtype, reps=reps)
+    autotune_block(m, p, p, dtype=dtype, reps=reps)
+    if n is not None:
+        autotune_logistic_block(m, n, p, dtype=dtype, reps=reps)
+        autotune_rank_block(m, n, p, dtype=dtype, reps=reps)
+
+
+def autotune_block(m: int, p: int, r: int, *, dtype=jnp.float32,
+                   backend: str | None = None,
+                   interpret: bool | None = None,
+                   candidates: List[Tuple[int, int, int]] | None = None,
+                   reps: int = 2, use_disk: bool = True
+                   ) -> Tuple[int, int, int]:
+    """Winning (bp, br, bk) tiling for a batched FISTA solve step of
+    this (m, p, r) shape (kernel namespace `fista_step`)."""
+    def make_sweep(interp):
+        k0, k1, k2 = jax.random.split(jax.random.PRNGKey(0), 3)
+        Sigmas = jax.random.normal(k0, (m, p, p), dtype)
+        zs = jax.random.normal(k1, (m, p, r), dtype)
+        cs = jax.random.normal(k2, (m, p, r), dtype)
+        etas = jnp.full((m,), 0.01, dtype)
+        return lambda cand: lambda: fista_step_batched_pallas(
+            Sigmas, zs, zs, cs, etas, 0.1, 0.5, bp=cand[0], br=cand[1],
+            bk=cand[2], interpret=interp)
+
+    return _autotune(
+        "fista_step", {"m": m, "p": p, "r": r},
+        resolve_blocks(p, r, 128),
+        block_candidates(p, r) if candidates is None else candidates,
+        make_sweep, dtype=dtype, backend=backend, interpret=interpret,
+        reps=reps, use_disk=use_disk)
+
+
+def autotune_logistic_block(m: int, n: int, p: int, *, dtype=jnp.float32,
+                            backend: str | None = None,
+                            interpret: bool | None = None,
+                            candidates: List[int] | None = None,
+                            reps: int = 2, use_disk: bool = True) -> int:
+    """Winning sample tile bn for a (m, n, p) fused logistic-gradient
+    batch (kernel namespace `logistic_grad`)."""
+    def make_sweep(interp):
+        k0, k1 = jax.random.split(jax.random.PRNGKey(0))
+        Xs = jax.random.normal(k0, (m, n, p), dtype)
+        ys = jnp.sign(jax.random.normal(k1, (m, n), dtype))
+        B = jnp.zeros((m, p), dtype)
+        return lambda bn: lambda: logistic_grad_pallas(
+            Xs, ys, B, bn=bn, interpret=interp)
+
+    return _autotune(
+        "logistic_grad", {"m": m, "n": n, "p": p}, min(128, n),
+        logistic_candidates(n) if candidates is None else candidates,
+        make_sweep, dtype=dtype, backend=backend, interpret=interpret,
+        reps=reps, use_disk=use_disk)
+
+
+def autotune_rank_block(m: int, n: int, p: int, *, dtype=jnp.float32,
+                        backend: str | None = None,
+                        interpret: bool | None = None,
+                        candidates: List[Tuple[int, int]] | None = None,
+                        reps: int = 2, use_disk: bool = True
+                        ) -> Tuple[int, int]:
+    """Winning (bp, bn) tiling for a (m, n, p) fused rank-n statistics
+    update (kernel namespace `rank_update`)."""
+    from repro.kernels.rank_update.ops import resolve_rank_blocks
+
+    def make_sweep(interp):
+        k0, k1 = jax.random.split(jax.random.PRNGKey(0))
+        Xs = jax.random.normal(k0, (m, n, p), dtype)
+        ys = jax.random.normal(k1, (m, n), dtype)
+        # tune the unweighted specialization — the always-on ingest case
+        return lambda cand: lambda: rank_update_pallas(
+            Xs, ys, bp=cand[0], bn=cand[1], interpret=interp)
+
+    return _autotune(
+        "rank_update", {"m": m, "n": n, "p": p},
+        resolve_rank_blocks(n, p, 128),
+        rank_candidates(n, p) if candidates is None else candidates,
+        make_sweep, dtype=dtype, backend=backend, interpret=interpret,
+        reps=reps, use_disk=use_disk)

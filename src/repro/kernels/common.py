@@ -1,0 +1,32 @@
+"""Shared routing/clipping helpers for the sample-streaming kernel
+dispatchers (`logistic_grad`, `rank_update`). One definition site so
+the dispatchers — and the engine block policies built on them — can
+never desync.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fit_block(size: int, block: int) -> int:
+    """Largest divisor of `size` that is <= `block` — the legal tile
+    closest to the requested one. (NOT the halving loop of the older
+    ista dispatcher: halving a non-divisor request like 48 against
+    size 80 bottoms out at 1 and silently degrades the grid to
+    single-element tiles; the divisor scan returns 40.)"""
+    b = min(block, size)
+    while size % b:
+        b -= 1
+    return b
+
+
+def is_ragged_samples(n: int, p: int) -> bool:
+    """THE routing predicate for the sample-streaming kernels (logistic
+    gradient, rank-n update): shapes whose sample or feature axis the
+    TPU tiling cannot legally cover go to the jnp oracle. Shared with
+    the engine's block policies so the two can never desync."""
+    return bool(n % 8 or p % 8)

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: fused all-tasks logistic gradient.
+
+One dispatch computes, for every task t, the full gradient of the
+logistic loss at the current iterate:
+
+    z = X b,   r = y * sigmoid(-y z),   g = -X' r / n.
+
+Tiling (DESIGN.md §11): the grid is (m, nj) — tasks outermost, sample
+tiles of `bn` rows innermost. Each (t, j) step loads one (bn, p) slab
+of X_t with the FULL feature dimension as the lane axis, so the forward
+matvec `X_j @ b`, the sigmoid residual, and the back-projection
+`X_j' r_j` all fire on the same resident VMEM tile — X is streamed
+exactly once and z/r never round-trip through HBM. The per-task
+gradient accumulates in a (p, 1) f32 VMEM scratch across the j sweep
+and the epilogue scales by -1/n (a compile-time constant) on the last
+sample tile. The layout trades p-tiling for single-pass fusion: a slab
+is bn*p elements of VMEM, right for the paper regime (p up to a few
+thousand); the dispatcher routes larger/ragged shapes to the jnp
+oracle.
+
+`logistic_z_pallas` / `logistic_backproject_pallas` are the UNFUSED
+halves (forward matvec only / back-projection of a precomputed
+residual). They exist as the two-dispatch baseline the fused kernel is
+benchmarked against (benchmarks/kernels_bench.py) — same tiles, same
+arithmetic, one extra HBM round trip for the residual.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _logistic_grad_kernel(x_ref, y_ref, b_ref, out_ref, acc_ref, *,
+                          nj: int, inv_n: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                        # (bn, p)
+    z = jnp.dot(x, b_ref[0].astype(jnp.float32),
+                preferred_element_type=jnp.float32)     # (bn, 1)
+    y = y_ref[0].astype(jnp.float32)                    # (bn, 1)
+    r = y * jax.nn.sigmoid(-y * z)
+    acc_ref[...] += jnp.dot(x.T, r,
+                            preferred_element_type=jnp.float32)  # (p, 1)
+
+    @pl.when(j == nj - 1)
+    def _epilogue():
+        out_ref[0] = (-inv_n * acc_ref[...]).astype(out_ref.dtype)
+
+
+def _logistic_z_kernel(x_ref, b_ref, z_ref):
+    z_ref[0] = jnp.dot(x_ref[0], b_ref[0].astype(jnp.float32),
+                       preferred_element_type=jnp.float32
+                       ).astype(z_ref.dtype)
+
+
+def _backproject_kernel(x_ref, r_ref, out_ref, acc_ref, *, nj: int,
+                        inv_n: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[0].T, r_ref[0].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(j == nj - 1)
+    def _epilogue():
+        out_ref[0] = (-inv_n * acc_ref[...]).astype(out_ref.dtype)
+
+
+def _grid_specs(m, n, p, bn):
+    nj = n // bn
+    x_spec = pl.BlockSpec((1, bn, p), lambda t, j: (t, j, 0))
+    col_spec = pl.BlockSpec((1, bn, 1), lambda t, j: (t, j, 0))
+    task_p_spec = pl.BlockSpec((1, p, 1), lambda t, j: (t, 0, 0))
+    return (m, nj), nj, x_spec, col_spec, task_p_spec
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def logistic_grad_pallas(Xs, ys, B, *, bn: int = 128,
+                         interpret: bool = False):
+    """Fused all-tasks logistic gradient in ONE pallas call.
+
+    Xs: (m, n, p); ys: (m, n) in {-1, +1}; B: (m, p). Returns g (m, p)
+    = -X'(y sigmoid(-y Xb))/n per task. `bn` tiles the sample axis; the
+    feature axis rides whole in the lane dimension.
+    """
+    m, n, p = Xs.shape
+    bn = min(bn, n)
+    assert n % bn == 0, (m, n, p, bn)
+    grid, nj, x_spec, col_spec, task_p_spec = _grid_specs(m, n, p, bn)
+    out = pl.pallas_call(
+        functools.partial(_logistic_grad_kernel, nj=nj, inv_n=1.0 / n),
+        grid=grid,
+        in_specs=[x_spec, col_spec, task_p_spec],
+        out_specs=task_p_spec,
+        out_shape=jax.ShapeDtypeStruct((m, p, 1), B.dtype),
+        scratch_shapes=[pltpu.VMEM((p, 1), jnp.float32)],
+        interpret=interpret,
+    )(Xs, ys[..., None], B[..., None])
+    return out[..., 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def logistic_grad_unfused_pallas(Xs, ys, B, *, bn: int = 128,
+                                 interpret: bool = False):
+    """The two-dispatch baseline: forward-matvec kernel, jnp residual,
+    back-projection kernel. Same tiles and arithmetic as the fused
+    kernel, plus one (m, n) round trip through HBM for the residual —
+    the pre-fusion cost the benchmark pair tracks."""
+    m, n, p = Xs.shape
+    bn = min(bn, n)
+    assert n % bn == 0, (m, n, p, bn)
+    grid, nj, x_spec, col_spec, task_p_spec = _grid_specs(m, n, p, bn)
+    z = pl.pallas_call(
+        _logistic_z_kernel,
+        grid=grid,
+        in_specs=[x_spec, task_p_spec],
+        out_specs=col_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n, 1), jnp.float32),
+        interpret=interpret,
+    )(Xs, B[..., None])[..., 0]
+    r = ys * jax.nn.sigmoid(-ys * z.astype(ys.dtype))
+    out = pl.pallas_call(
+        functools.partial(_backproject_kernel, nj=nj, inv_n=1.0 / n),
+        grid=grid,
+        in_specs=[x_spec, col_spec],
+        out_specs=task_p_spec,
+        out_shape=jax.ShapeDtypeStruct((m, p, 1), B.dtype),
+        scratch_shapes=[pltpu.VMEM((p, 1), jnp.float32)],
+        interpret=interpret,
+    )(Xs, r[..., None])
+    return out[..., 0]

@@ -1,0 +1,59 @@
+"""Dispatcher for the fused all-tasks logistic gradient.
+
+Same convention as `kernels/ista_step/ops.py`: the pallas kernel on
+MXU-friendly shapes (interpret mode off-TPU so the same BlockSpecs
+execute everywhere), the jnp oracle on ragged shapes — and the oracle
+is bitwise the engine's historical inline einsum gradient, so routing
+never perturbs solver iterates.
+"""
+from __future__ import annotations
+
+from repro.kernels.common import fit_block, is_ragged_samples, on_tpu
+from repro.kernels.logistic_grad.kernel import (
+    logistic_grad_pallas, logistic_grad_unfused_pallas,
+)
+from repro.kernels.logistic_grad.ref import logistic_grad_ref
+
+# the kernel keeps the FULL feature axis resident per X slab (see
+# kernel.py); past this p the slab outgrows its VMEM budget, so the
+# dispatcher honours the documented "larger shapes belong to the
+# oracle" contract instead of failing Mosaic compilation
+MAX_FULL_LANE_P = 4096
+
+
+def routes_to_oracle(n: int, p: int) -> bool:
+    """True when this (n, p) never reaches the pallas kernel — ragged,
+    or feature axis too large for a resident full-p slab. The engine's
+    block policy shares this so it never sweeps a shape the dispatcher
+    will not serve."""
+    return is_ragged_samples(n, p) or p > MAX_FULL_LANE_P
+
+
+def logistic_grad(Xs, ys, B, *, block: int = 128,
+                  interpret: bool | None = None):
+    """All-tasks logistic gradient -X'(y sigmoid(-y Xb))/n.
+
+    Xs (m, n, p), ys (m, n) in {-1, +1}, B (m, p) -> (m, p). `block`
+    (an int `bn`, e.g. an autotuned winner from `repro.kernels.
+    autotune.autotune_logistic_block`) tiles the sample axis; ragged
+    and larger-than-VMEM-slab shapes fall back to `logistic_grad_ref`.
+    """
+    m, n, p = Xs.shape
+    interp = (not on_tpu()) if interpret is None else interpret
+    if routes_to_oracle(n, p):
+        return logistic_grad_ref(Xs, ys, B)
+    bn = fit_block(n, block if isinstance(block, int) else block[0])
+    return logistic_grad_pallas(Xs, ys, B, bn=bn, interpret=interp)
+
+
+def logistic_grad_unfused(Xs, ys, B, *, block: int = 128,
+                          interpret: bool | None = None):
+    """Two-dispatch (matvec + back-projection) pallas baseline with the
+    same routing policy — exists for the fused-vs-unfused benchmark pair
+    and as a second kernel-path parity anchor in tests."""
+    m, n, p = Xs.shape
+    interp = (not on_tpu()) if interpret is None else interpret
+    if routes_to_oracle(n, p):
+        return logistic_grad_ref(Xs, ys, B)
+    bn = fit_block(n, block if isinstance(block, int) else block[0])
+    return logistic_grad_unfused_pallas(Xs, ys, B, bn=bn, interpret=interp)

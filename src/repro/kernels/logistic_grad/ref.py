@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused all-tasks logistic gradient.
+
+The batched l1-logistic FISTA loop (core/engine.solve_logistic_lasso_
+batched) spends its whole iteration on
+
+    z = X @ b            (forward einsum)
+    r = y * sigmoid(-y z)  (residual)
+    g = -X' r / n          (back-projection)
+
+for all m tasks at once. This oracle IS the engine's historical inline
+gradient (bitwise — the dispatcher's CPU path must not perturb the
+solver iterates) and the reference the Pallas kernel is tested against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def logistic_grad_ref(Xs: jnp.ndarray, ys: jnp.ndarray,
+                      B: jnp.ndarray) -> jnp.ndarray:
+    """All-tasks logistic gradient. Xs (m, n, p), ys (m, n) in {-1, +1},
+    B (m, p) -> g (m, p) with g_t = -X_t'(y_t sigmoid(-y_t X_t b_t))/n."""
+    n = Xs.shape[1]
+    z = jnp.einsum("tnp,tp->tn", Xs, B)
+    return -jnp.einsum("tnp,tn->tp", Xs,
+                       ys * jax.nn.sigmoid(-ys * z)) / n

@@ -1,0 +1,201 @@
+"""Pallas TPU kernel: fused rank-n sufficient-statistics update.
+
+One dispatch folds a raw sample chunk into both statistics every DSML
+path consumes:
+
+    Sigma = n^-1 X' W X,    c = n^-1 X' W y
+
+for all m tasks — the streaming layer's always-on ingest hot loop and
+the front of every batch fit. Tiling (DESIGN.md §11): the grid is
+(m, ni, nj, nk) — the (p, p) covariance output is tiled (bp, bp) over
+(i, j), and the contraction over samples runs innermost in `bn`-row
+tiles with an f32 VMEM scratch accumulator, exactly the layout of the
+batched ISTA kernel with samples as the contraction axis. The
+correlation c shares the sweep instead of paying a second pass: its
+(bp, 1) accumulator advances on the j == 0 column sweep (the same
+weighted X tile `W X_i` feeds both MXU dots), and both epilogues scale
+by 1/n (compile-time constant) on the last sample tile. The diagonal
+weight W rides as a (bn, 1) column so the weighting is one VPU
+broadcast-multiply per tile; `weights=None` compiles an unweighted
+specialization with no W stream and no multiply (the always-on ingest
+common case).
+
+`sigma_only_pallas` / `c_only_pallas` are the UNFUSED halves — the
+two-dispatch baseline the fused kernel is benchmarked against
+(benchmarks/kernels_bench.py), which streams X twice.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rank_update_kernel(*refs, nk: int, inv_n: float, weighted: bool):
+    # the unweighted specialization (the always-on ingest common case)
+    # drops the w input stream and the per-tile broadcast multiply
+    if weighted:
+        (xi_ref, xj_ref, w_ref, y_ref, sig_ref, c_ref,
+         sig_acc, c_acc) = refs
+    else:
+        xi_ref, xj_ref, y_ref, sig_ref, c_ref, sig_acc, c_acc = refs
+    j = pl.program_id(2)
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init_sig():
+        sig_acc[...] = jnp.zeros_like(sig_acc)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init_c():
+        c_acc[...] = jnp.zeros_like(c_acc)
+
+    xiw = xi_ref[0].astype(jnp.float32)
+    if weighted:
+        xiw = xiw * w_ref[0].astype(jnp.float32)
+    sig_acc[...] += jnp.dot(xiw.T, xj_ref[0].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _c_accum():
+        c_acc[...] += jnp.dot(xiw.T, y_ref[0].astype(jnp.float32),
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _sig_epilogue():
+        sig_ref[0] = (inv_n * sig_acc[...]).astype(sig_ref.dtype)
+
+    @pl.when(jnp.logical_and(j == 0, k == nk - 1))
+    def _c_epilogue():
+        c_ref[0] = (inv_n * c_acc[...]).astype(c_ref.dtype)
+
+
+def _sigma_only_kernel(*refs, nk: int, inv_n: float, weighted: bool):
+    if weighted:
+        xi_ref, xj_ref, w_ref, sig_ref, sig_acc = refs
+    else:
+        xi_ref, xj_ref, sig_ref, sig_acc = refs
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        sig_acc[...] = jnp.zeros_like(sig_acc)
+
+    xiw = xi_ref[0].astype(jnp.float32)
+    if weighted:
+        xiw = xiw * w_ref[0].astype(jnp.float32)
+    sig_acc[...] += jnp.dot(xiw.T, xj_ref[0].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        sig_ref[0] = (inv_n * sig_acc[...]).astype(sig_ref.dtype)
+
+
+def _c_only_kernel(*refs, nk: int, inv_n: float, weighted: bool):
+    if weighted:
+        xi_ref, w_ref, y_ref, c_ref, c_acc = refs
+    else:
+        xi_ref, y_ref, c_ref, c_acc = refs
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        c_acc[...] = jnp.zeros_like(c_acc)
+
+    xiw = xi_ref[0].astype(jnp.float32)
+    if weighted:
+        xiw = xiw * w_ref[0].astype(jnp.float32)
+    c_acc[...] += jnp.dot(xiw.T, y_ref[0].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        c_ref[0] = (inv_n * c_acc[...]).astype(c_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "bn", "interpret"))
+def rank_update_pallas(Xs, ys, weights=None, *, bp: int = 128,
+                       bn: int = 128, interpret: bool = False):
+    """Fused rank-n statistics update in ONE pallas call.
+
+    Xs (m, n, p); ys and optional weights (m, n). Returns
+    (Sigmas (m, p, p), cs (m, p)) = (n^-1 X'WX, n^-1 X'Wy) per task.
+    `bp` tiles the feature axis (both covariance output dims), `bn` the
+    contracted sample axis. `weights=None` compiles the unweighted
+    specialization — no W input stream, no per-tile multiply — which is
+    the always-on ingest common case.
+    """
+    m, n, p = Xs.shape
+    bp = min(bp, p)
+    bn = min(bn, n)
+    assert p % bp == 0 and n % bn == 0, (m, n, p, bp, bn)
+    ni = nj = p // bp
+    nk = n // bn
+    weighted = weights is not None
+    xi_spec = pl.BlockSpec((1, bn, bp), lambda t, i, j, k: (t, k, i))
+    xj_spec = pl.BlockSpec((1, bn, bp), lambda t, i, j, k: (t, k, j))
+    col_spec = pl.BlockSpec((1, bn, 1), lambda t, i, j, k: (t, k, 0))
+    w_ops = [weights[..., None]] if weighted else []
+    Sig, cs = pl.pallas_call(
+        functools.partial(_rank_update_kernel, nk=nk, inv_n=1.0 / n,
+                          weighted=weighted),
+        grid=(m, ni, nj, nk),
+        in_specs=[xi_spec, xj_spec] + [col_spec] * (1 + weighted),
+        out_specs=(
+            pl.BlockSpec((1, bp, bp), lambda t, i, j, k: (t, i, j)),
+            pl.BlockSpec((1, bp, 1), lambda t, i, j, k: (t, i, 0)),
+        ),
+        out_shape=(jax.ShapeDtypeStruct((m, p, p), Xs.dtype),
+                   jax.ShapeDtypeStruct((m, p, 1), Xs.dtype)),
+        scratch_shapes=[pltpu.VMEM((bp, bp), jnp.float32),
+                        pltpu.VMEM((bp, 1), jnp.float32)],
+        interpret=interpret,
+    )(Xs, Xs, *w_ops, ys[..., None])
+    return Sig, cs[..., 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "bn", "interpret"))
+def rank_update_unfused_pallas(Xs, ys, weights=None, *, bp: int = 128,
+                               bn: int = 128, interpret: bool = False):
+    """The two-dispatch baseline: a covariance-only kernel plus a
+    correlation-only kernel. Same tiles and arithmetic as the fused
+    kernel (including the unweighted specialization), but X is streamed
+    (and weighted) twice."""
+    m, n, p = Xs.shape
+    bp = min(bp, p)
+    bn = min(bn, n)
+    assert p % bp == 0 and n % bn == 0, (m, n, p, bp, bn)
+    ni = nj = p // bp
+    nk = n // bn
+    weighted = weights is not None
+    w_ops = [weights[..., None]] if weighted else []
+    xi4 = pl.BlockSpec((1, bn, bp), lambda t, i, j, k: (t, k, i))
+    xj4 = pl.BlockSpec((1, bn, bp), lambda t, i, j, k: (t, k, j))
+    col4 = pl.BlockSpec((1, bn, 1), lambda t, i, j, k: (t, k, 0))
+    Sig = pl.pallas_call(
+        functools.partial(_sigma_only_kernel, nk=nk, inv_n=1.0 / n,
+                          weighted=weighted),
+        grid=(m, ni, nj, nk),
+        in_specs=[xi4, xj4] + [col4] * weighted,
+        out_specs=pl.BlockSpec((1, bp, bp), lambda t, i, j, k: (t, i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, p, p), Xs.dtype),
+        scratch_shapes=[pltpu.VMEM((bp, bp), jnp.float32)],
+        interpret=interpret,
+    )(Xs, Xs, *w_ops)
+    xi3 = pl.BlockSpec((1, bn, bp), lambda t, i, k: (t, k, i))
+    col3 = pl.BlockSpec((1, bn, 1), lambda t, i, k: (t, k, 0))
+    cs = pl.pallas_call(
+        functools.partial(_c_only_kernel, nk=nk, inv_n=1.0 / n,
+                          weighted=weighted),
+        grid=(m, ni, nk),
+        in_specs=[xi3] + [col3] * (1 + weighted),
+        out_specs=pl.BlockSpec((1, bp, 1), lambda t, i, k: (t, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, p, 1), Xs.dtype),
+        scratch_shapes=[pltpu.VMEM((bp, 1), jnp.float32)],
+        interpret=interpret,
+    )(Xs, *w_ops, ys[..., None])
+    return Sig, cs[..., 0]

@@ -1,0 +1,67 @@
+"""Dispatcher for the fused rank-n sufficient-statistics update.
+
+Same convention as `kernels/ista_step/ops.py` and
+`kernels/logistic_grad/ops.py`: pallas on MXU-friendly shapes
+(interpret mode off-TPU), the jnp oracle on ragged shapes — and the
+oracle is bitwise the historical `sufficient_stats` einsum pair, so the
+CPU default path perturbs nothing downstream.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.common import fit_block, is_ragged_samples, on_tpu
+from repro.kernels.rank_update.kernel import (
+    rank_update_pallas, rank_update_unfused_pallas,
+)
+from repro.kernels.rank_update.ref import rank_update_ref
+
+
+def resolve_rank_blocks(n: int, p: int, block) -> Tuple[int, int]:
+    """Normalize a block policy to concrete (bp, bn) tile sizes.
+    `block` is one int (applied to both axes) or an explicit (bp, bn)
+    pair, e.g. an autotuned winner from `repro.kernels.autotune.
+    autotune_rank_block`; each entry is clipped to the largest divisor
+    of its dimension."""
+    bp, bn = block if isinstance(block, tuple) else (block, block)
+    return fit_block(p, bp), fit_block(n, bn)
+
+
+def rank_update(Xs, ys, weights=None, *, block=128,
+                interpret: bool | None = None,
+                use_kernel: bool | None = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-task statistics (n^-1 X'WX, n^-1 X'Wy) for a sample chunk.
+
+    Xs (m, n, p), ys (m, n), optional weights (m, n) ->
+    (Sigmas (m, p, p), cs (m, p)). Routes to the fused pallas kernel on
+    MXU-friendly shapes when `use_kernel` (default: only on TPU — the
+    XLA einsum oracle is the fast CPU path); ragged shapes always take
+    the oracle. `block` is an int or an explicit (bp, bn) pair.
+    """
+    m, n, p = Xs.shape
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    interp = (not on_tpu()) if interpret is None else interpret
+    if not use_kernel or is_ragged_samples(n, p):
+        return rank_update_ref(Xs, ys, weights)
+    bp, bn = resolve_rank_blocks(n, p, block)
+    return rank_update_pallas(Xs, ys, weights, bp=bp, bn=bn,
+                              interpret=interp)
+
+
+def rank_update_unfused(Xs, ys, weights=None, *, block=128,
+                        interpret: bool | None = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Two-dispatch (covariance + correlation) pallas baseline with the
+    same routing policy — exists for the fused-vs-unfused benchmark
+    pair and as a second kernel-path parity anchor in tests."""
+    m, n, p = Xs.shape
+    interp = (not on_tpu()) if interpret is None else interpret
+    if is_ragged_samples(n, p):
+        return rank_update_ref(Xs, ys, weights)
+    bp, bn = resolve_rank_blocks(n, p, block)
+    return rank_update_unfused_pallas(Xs, ys, weights, bp=bp, bn=bn,
+                                      interpret=interp)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused rank-n sufficient-statistics update.
+
+The reduction every DSML path starts from — and the streaming layer's
+always-on hot loop (`stream/state.ingest`):
+
+    Sigma = n^-1 X' W X,    c = n^-1 X' W y     (W optional, diagonal)
+
+for all m tasks. This oracle IS the historical `core/engine.
+sufficient_stats` einsum pair (bitwise — the dispatcher's CPU path must
+not perturb any downstream solve) and the reference the Pallas kernel
+is tested against.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=())
+def rank_update_ref(Xs: jnp.ndarray, ys: jnp.ndarray,
+                    weights: jnp.ndarray | None = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Xs (m, n, p), ys (m, n), weights optional (m, n) ->
+    Sigmas (m, p, p), cs (m, p), both normalized by n (NOT sum(w) —
+    the caller owns the weighted-count convention)."""
+    n = Xs.shape[1]
+    Xl = Xs if weights is None else Xs * weights[..., None]
+    Sigmas = jnp.einsum("tni,tnj->tij", Xl, Xs) / n
+    cs = jnp.einsum("tni,tn->ti", Xl, ys) / n
+    return Sigmas, cs

@@ -60,6 +60,7 @@ class StreamingDsmlService:
                  debias_iters: int = 600,
                  warm_lasso_iters: Optional[int] = None,
                  warm_debias_iters: Optional[int] = None,
+                 chunk_n: Optional[int] = None,
                  mesh=None, data_axis: str = "data",
                  task_axis: str = "task"):
         if window is not None and mesh is not None:
@@ -84,9 +85,11 @@ class StreamingDsmlService:
             if max_refit_interval is not None else 16 * refit_every
         self.mesh, self.data_axis, self.task_axis = mesh, data_axis, task_axis
         # warm the kernel block-size cache for this workload's solve
-        # shapes before any jitted refit traces (no-op off-TPU)
+        # shapes — and, when the expected chunk rows `chunk_n` are
+        # known, for the rank-n ingest and logistic-gradient kernels —
+        # before any jitted ingest/refit traces (no-op off-TPU)
         from repro.kernels.autotune import warmup_cache
-        warmup_cache(m, p, dtype=dtype)
+        warmup_cache(m, p, chunk_n, dtype=dtype)
         self.state = init_stream_state(m, p, dtype)
         self.window = init_window(window, m, p, dtype) if window else None
         self._interval = refit_every

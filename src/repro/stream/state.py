@@ -85,6 +85,11 @@ def ingest(state: StreamState, X_batch: jnp.ndarray, y_batch: jnp.ndarray,
            weights: jnp.ndarray | None = None, decay=1.0) -> StreamState:
     """Rank-n update from a raw minibatch. X (m, n, p), y (m, n).
 
+    The chunk reduction is `sufficient_stats`, i.e. on TPU the fused
+    Pallas `kernels/rank_update` kernel — Sigma_b and c_b from ONE
+    pass over the chunk (DESIGN.md §11) — and the XLA einsum oracle on
+    CPU.
+
     `weights` (m, n) importance-weights samples within the chunk (the
     chunk's effective count becomes sum(weights) per task); `decay`
     applies exponential forgetting to everything already ingested.

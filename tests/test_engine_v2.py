@@ -334,6 +334,43 @@ def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
     assert blk3 == blk and not timed
 
 
+def test_autotune_keys_namespaced_per_kernel(tmp_path, monkeypatch):
+    """ISSUE 4 fix: the three sweep families write per-kernel-namespaced
+    keys, so coinciding dimension tuples (e.g. a (m, n, p) logistic key
+    vs a (m, p, r) fista key with equal numbers) can never collide."""
+    import json
+    from repro.kernels import autotune
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    autotune.clear_memory_cache()
+    autotune.autotune_block(2, 32, 16, reps=1)
+    autotune.autotune_logistic_block(2, 32, 16, reps=1)
+    autotune.autotune_rank_block(2, 32, 16, reps=1)
+    disk = json.loads(autotune.cache_path().read_text())
+    assert len(disk) == 3
+    prefixes = sorted(k.split("/")[0] for k in disk)
+    assert prefixes == ["fista_step", "logistic_grad", "rank_update"]
+
+
+def test_autotune_migrates_legacy_unnamespaced_cache(tmp_path, monkeypatch):
+    """Pre-namespace autotune.json files (fista-only, bare keys) keep
+    serving: loads migrate them under fista_step/ and rewrite the file
+    — and the migrated entry is served without re-timing."""
+    import json
+    from repro.kernels import autotune
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    autotune.clear_memory_cache()
+    autotune.cache_path().parent.mkdir(parents=True, exist_ok=True)
+    autotune.cache_path().write_text(
+        json.dumps({"cpu_m2_p32_r1_float32": [32, 1, 32]}))
+    monkeypatch.setattr(
+        autotune, "_time_candidate",
+        lambda fn, reps: (_ for _ in ()).throw(
+            AssertionError("migrated key must be served, not re-timed")))
+    assert autotune.autotune_block(2, 32, 1, reps=1) == (32, 1, 32)
+    disk = json.loads(autotune.cache_path().read_text())
+    assert disk == {"fista_step/cpu_m2_p32_r1_float32": [32, 1, 32]}
+
+
 def test_explicit_block_bypasses_autotune(monkeypatch):
     from repro.kernels import autotune
     def boom(*a, **k):

@@ -1,0 +1,137 @@
+"""Property tests for the fused logistic-gradient and rank-n update
+kernels: interpret-mode pallas == jnp oracle to 1e-5 over hypothesis-
+drawn shapes, block sizes, and dtypes — including non-divisor block
+edges, where the dispatcher must clip the tile to a legal divisor or
+route the ragged shape to the oracle without the caller noticing.
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dep (pip install .[test])")
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.logistic_grad.ops import (
+    is_ragged_samples, logistic_grad, logistic_grad_unfused,
+)
+from repro.kernels.logistic_grad.ref import logistic_grad_ref
+from repro.kernels.rank_update.ops import rank_update, rank_update_unfused
+from repro.kernels.rank_update.ref import rank_update_ref
+
+# multiples of 8 keep the kernel path active; the *_any strategies also
+# draw ragged sizes to exercise the oracle routing. Blocks deliberately
+# include non-divisors of every size (e.g. 48 against n=80) so the
+# divisor-clip path is always on the table.
+DIMS_8 = st.sampled_from([8, 16, 24, 32, 40, 64, 80])
+DIMS_ANY = st.sampled_from([5, 8, 12, 16, 30, 33, 64])
+BLOCKS = st.sampled_from([8, 16, 24, 32, 48, 128])
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def _tol(dtype):
+    return 1e-5 if dtype == jnp.float32 else 0.05
+
+
+def _logistic_case(m, n, p, dtype, seed):
+    k = jax.random.PRNGKey(seed)
+    Xs = jax.random.normal(k, (m, n, p), dtype)
+    ys = jnp.sign(jax.random.normal(jax.random.PRNGKey(seed + 1), (m, n))
+                  ).astype(dtype)
+    B = (jax.random.normal(jax.random.PRNGKey(seed + 2), (m, p)) * 0.3
+         ).astype(dtype)
+    return Xs, ys, B
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 4), n=DIMS_8, p=DIMS_8, block=BLOCKS,
+       dtype=DTYPES, seed=st.integers(0, 3))
+def test_logistic_grad_fused_matches_oracle(m, n, p, block, dtype, seed):
+    Xs, ys, B = _logistic_case(m, n, p, dtype, seed)
+    out = logistic_grad(Xs, ys, B, block=block, interpret=True)
+    ref = logistic_grad_ref(Xs, ys, B)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype))
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 3), n=DIMS_ANY, p=DIMS_ANY,
+       block=BLOCKS, seed=st.integers(0, 3))
+def test_logistic_grad_ragged_shapes_route_to_oracle(m, n, p, block, seed):
+    """Any (n, p) — ragged included — must return oracle-exact output;
+    the dispatcher owns the routing, callers never pre-check."""
+    Xs, ys, B = _logistic_case(m, n, p, jnp.float32, seed)
+    out = logistic_grad(Xs, ys, B, block=block, interpret=True)
+    ref = logistic_grad_ref(Xs, ys, B)
+    if is_ragged_samples(n, p):
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    else:
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 3), n=DIMS_8, p=DIMS_8, block=BLOCKS,
+       seed=st.integers(0, 3))
+def test_logistic_grad_unfused_matches_oracle(m, n, p, block, seed):
+    """The two-dispatch bench baseline obeys the same contract."""
+    Xs, ys, B = _logistic_case(m, n, p, jnp.float32, seed)
+    out = logistic_grad_unfused(Xs, ys, B, block=block, interpret=True)
+    ref = logistic_grad_ref(Xs, ys, B)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def _rank_case(m, n, p, dtype, seed, weighted):
+    k = jax.random.PRNGKey(seed)
+    Xs = jax.random.normal(k, (m, n, p), dtype)
+    ys = jax.random.normal(jax.random.PRNGKey(seed + 1), (m, n), dtype)
+    w = None
+    if weighted:
+        w = (jax.random.uniform(jax.random.PRNGKey(seed + 2), (m, n))
+             + 0.25).astype(dtype)
+    return Xs, ys, w
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 4), n=DIMS_8, p=DIMS_8, bp=BLOCKS, bn=BLOCKS,
+       dtype=DTYPES, weighted=st.booleans(), seed=st.integers(0, 3))
+def test_rank_update_fused_matches_oracle(m, n, p, bp, bn, dtype,
+                                          weighted, seed):
+    Xs, ys, w = _rank_case(m, n, p, dtype, seed, weighted)
+    S, c = rank_update(Xs, ys, w, block=(bp, bn), interpret=True,
+                       use_kernel=True)
+    S_ref, c_ref = rank_update_ref(Xs, ys, w)
+    np.testing.assert_allclose(np.asarray(S, np.float32),
+                               np.asarray(S_ref, np.float32),
+                               atol=_tol(dtype))
+    np.testing.assert_allclose(np.asarray(c, np.float32),
+                               np.asarray(c_ref, np.float32),
+                               atol=_tol(dtype))
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 3), n=DIMS_ANY, p=DIMS_ANY, bp=BLOCKS,
+       bn=BLOCKS, weighted=st.booleans(), seed=st.integers(0, 3))
+def test_rank_update_ragged_shapes_route_to_oracle(m, n, p, bp, bn,
+                                                   weighted, seed):
+    Xs, ys, w = _rank_case(m, n, p, jnp.float32, seed, weighted)
+    S, c = rank_update(Xs, ys, w, block=(bp, bn), interpret=True,
+                       use_kernel=True)
+    S_ref, c_ref = rank_update_ref(Xs, ys, w)
+    tol = 0.0 if is_ragged_samples(n, p) else 1e-5
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref), atol=tol)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref), atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 3), n=DIMS_8, p=DIMS_8, bp=BLOCKS, bn=BLOCKS,
+       weighted=st.booleans(), seed=st.integers(0, 3))
+def test_rank_update_unfused_matches_oracle(m, n, p, bp, bn, weighted,
+                                            seed):
+    Xs, ys, w = _rank_case(m, n, p, jnp.float32, seed, weighted)
+    S, c = rank_update_unfused(Xs, ys, w, block=(bp, bn), interpret=True)
+    S_ref, c_ref = rank_update_ref(Xs, ys, w)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref), atol=1e-5)

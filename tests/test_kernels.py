@@ -11,6 +11,10 @@ from repro.kernels.group_threshold.ops import group_threshold
 from repro.kernels.group_threshold.ref import group_threshold_ref
 from repro.kernels.ista_step.ops import ista_solve, ista_step
 from repro.kernels.ista_step.ref import ista_step_ref
+from repro.kernels.logistic_grad.ops import logistic_grad, logistic_grad_unfused
+from repro.kernels.logistic_grad.ref import logistic_grad_ref
+from repro.kernels.rank_update.ops import rank_update, rank_update_unfused
+from repro.kernels.rank_update.ref import rank_update_ref
 
 KEY = jax.random.PRNGKey(0)
 
@@ -59,6 +63,117 @@ def test_ista_solve_matches_fista_solution():
     active = jnp.abs(beta) > 1e-6
     viol = jnp.where(active, jnp.abs(g + lam * jnp.sign(beta)), 0.0)
     assert float(jnp.max(viol)) < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# logistic_grad (fused all-tasks gradient)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,p,bn", [(1, 64, 32, 16), (3, 96, 48, 32),
+                                      (4, 128, 200, 128), (2, 40, 16, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_logistic_grad_shapes_dtypes(m, n, p, bn, dtype):
+    Xs = jax.random.normal(KEY, (m, n, p), dtype)
+    ys = jnp.sign(jax.random.normal(jax.random.PRNGKey(1), (m, n))
+                  ).astype(dtype)
+    B = (jax.random.normal(jax.random.PRNGKey(2), (m, p)) * 0.3
+         ).astype(dtype)
+    out = logistic_grad(Xs, ys, B, block=bn, interpret=True)
+    ref = logistic_grad_ref(Xs, ys, B)
+    tol = 1e-5 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_logistic_grad_unfused_matches_fused():
+    m, n, p = 3, 64, 40
+    Xs = jax.random.normal(KEY, (m, n, p))
+    ys = jnp.sign(jax.random.normal(jax.random.PRNGKey(1), (m, n)))
+    B = jax.random.normal(jax.random.PRNGKey(2), (m, p)) * 0.3
+    fused = logistic_grad(Xs, ys, B, block=16, interpret=True)
+    unfused = logistic_grad_unfused(Xs, ys, B, block=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               atol=1e-6)
+
+
+def test_logistic_grad_ragged_falls_back_to_oracle():
+    """Ragged (n, p) must route to the oracle bitwise — callers never
+    pre-check shapes."""
+    m, n, p = 2, 33, 17
+    Xs = jax.random.normal(KEY, (m, n, p))
+    ys = jnp.sign(jax.random.normal(jax.random.PRNGKey(1), (m, n)))
+    B = jax.random.normal(jax.random.PRNGKey(2), (m, p))
+    out = logistic_grad(Xs, ys, B, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(logistic_grad_ref(Xs, ys, B)))
+
+
+# ---------------------------------------------------------------------------
+# rank_update (fused rank-n sufficient-statistics update)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,p,bp,bn", [(1, 64, 32, 16, 16),
+                                         (3, 96, 48, 48, 32),
+                                         (2, 128, 200, 128, 128),
+                                         (4, 24, 16, 64, 64)])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_rank_update_shapes_weights(m, n, p, bp, bn, weighted):
+    Xs = jax.random.normal(KEY, (m, n, p))
+    ys = jax.random.normal(jax.random.PRNGKey(1), (m, n))
+    w = (jax.random.uniform(jax.random.PRNGKey(2), (m, n)) + 0.25
+         ) if weighted else None
+    S, c = rank_update(Xs, ys, w, block=(bp, bn), interpret=True,
+                       use_kernel=True)
+    S_ref, c_ref = rank_update_ref(Xs, ys, w)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref), atol=1e-5)
+
+
+def test_rank_update_bf16():
+    m, n, p = 2, 64, 32
+    Xs = jax.random.normal(KEY, (m, n, p), jnp.bfloat16)
+    ys = jax.random.normal(jax.random.PRNGKey(1), (m, n), jnp.bfloat16)
+    S, c = rank_update(Xs, ys, block=32, interpret=True, use_kernel=True)
+    S_ref, c_ref = rank_update_ref(Xs, ys)
+    np.testing.assert_allclose(np.asarray(S, np.float32),
+                               np.asarray(S_ref, np.float32), atol=0.05)
+    np.testing.assert_allclose(np.asarray(c, np.float32),
+                               np.asarray(c_ref, np.float32), atol=0.05)
+
+
+def test_rank_update_unfused_matches_fused():
+    m, n, p = 3, 48, 32
+    Xs = jax.random.normal(KEY, (m, n, p))
+    ys = jax.random.normal(jax.random.PRNGKey(1), (m, n))
+    w = jax.random.uniform(jax.random.PRNGKey(2), (m, n)) + 0.25
+    S_f, c_f = rank_update(Xs, ys, w, block=16, interpret=True,
+                           use_kernel=True)
+    S_u, c_u = rank_update_unfused(Xs, ys, w, block=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(S_f), np.asarray(S_u), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c_f), np.asarray(c_u), atol=1e-6)
+
+
+def test_rank_update_ragged_falls_back_to_oracle():
+    m, n, p = 2, 33, 17
+    Xs = jax.random.normal(KEY, (m, n, p))
+    ys = jax.random.normal(jax.random.PRNGKey(1), (m, n))
+    S, c = rank_update(Xs, ys, interpret=True, use_kernel=True)
+    S_ref, c_ref = rank_update_ref(Xs, ys)
+    np.testing.assert_array_equal(np.asarray(S), np.asarray(S_ref))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c_ref))
+
+
+def test_sufficient_stats_kernel_path_matches_default():
+    """The engine entry point itself: kernel routing must be invisible
+    to callers of `sufficient_stats`."""
+    from repro.core.engine import sufficient_stats
+    Xs = jax.random.normal(KEY, (3, 64, 48))
+    ys = jax.random.normal(jax.random.PRNGKey(1), (3, 64))
+    S0, c0 = sufficient_stats(Xs, ys)
+    S1, c1 = sufficient_stats(Xs, ys, use_kernel=True, interpret=True,
+                              block=32)
+    np.testing.assert_allclose(np.asarray(S0), np.asarray(S1), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c0), np.asarray(c1), atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

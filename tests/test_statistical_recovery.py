@@ -1,0 +1,128 @@
+"""Statistical correctness tier: the paper's CLAIMS, not code parity.
+
+Everything else in the suite checks that refactored paths reproduce
+older paths; nothing pinned down whether the estimator is actually
+GOOD. These seeded end-to-end checks assert the two statistical
+properties of Wang–Kolar–Srebro (arXiv:1510.00633) — exact shared
+support recovery by the one-round group threshold, and
+debiased-estimator error within a fixed factor of the centralized
+lasso oracle (the one-shot guarantee of Lee et al., arXiv:1503.04337)
+— for both the regression (Algorithm 1) and logistic (Section 4)
+paths, at the paper's Section-6 data regime (AR(0.5) design, shared
+support, p = 200, s = 10, m = 10).
+
+All runs are seeded, so the committed thresholds are deterministic on
+a given jax/CPU stack; they carry 25%+ empirical margin (gap between
+the weakest on-support and strongest off-support row norm over seeds
+0-2) so float-level drift across versions cannot flip them. Runs in
+the default `make test` flow and alone via `make test-stats`.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    dsml_fit, dsml_logistic_fit, estimation_error, gen_classification,
+    gen_regression, group_lasso, sufficient_stats,
+)
+from repro.core.engine import solve_lasso_eq2, solve_logistic_lasso_batched
+
+P, S, M = 200, 10, 10          # the paper's Section-6 regime
+N_REG, N_LOG = 120, 350        # samples per task (logistic needs more:
+                               # each label carries ~1 bit, not a real)
+LAM_THRESH = 0.75              # group threshold: inside the on/off-support
+                               # row-norm gap for every calibrated seed
+
+
+def _base_lam(n: int) -> float:
+    return float(jnp.sqrt(jnp.log(float(P)) / n))
+
+
+def _fit_regression(seed: int, n: int = N_REG, Lam: float = LAM_THRESH):
+    data = gen_regression(jax.random.PRNGKey(seed), m=M, n=n, p=P, s=S)
+    base = _base_lam(n)
+    res = dsml_fit(data.Xs, data.ys, 4.0 * base, base, Lam=Lam)
+    return data, res
+
+
+def _fit_logistic(seed: int, n: int = N_LOG, Lam: float = LAM_THRESH):
+    data = gen_classification(jax.random.PRNGKey(seed), m=M, n=n, p=P, s=S)
+    base = _base_lam(n)
+    res = dsml_logistic_fit(data.Xs, data.ys, base, 2.0 * base, Lam=Lam,
+                            lasso_iters=400, debias_iters=400)
+    return data, res
+
+
+# ---------------------------------------------------------------------------
+# exact support recovery (paper Theorem 1 regime)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_regression_support_recovery_exact(seed):
+    """One round of debias + group threshold recovers the true shared
+    support exactly at the paper regime — AND with a margin: the
+    weakest on-support row norm clears the threshold the strongest
+    off-support row misses."""
+    data, res = _fit_regression(seed)
+    np.testing.assert_array_equal(np.asarray(res.support),
+                                  np.asarray(data.support))
+    norms = jnp.linalg.norm(res.beta_u.T, axis=-1)
+    assert float(jnp.min(norms[data.support])) > LAM_THRESH
+    assert float(jnp.max(norms[~data.support])) < LAM_THRESH
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_logistic_support_recovery_exact(seed):
+    data, res = _fit_logistic(seed)
+    np.testing.assert_array_equal(np.asarray(res.support),
+                                  np.asarray(data.support))
+    norms = jnp.linalg.norm(res.beta_u.T, axis=-1)
+    assert float(jnp.min(norms[data.support])) > LAM_THRESH
+    assert float(jnp.max(norms[~data.support])) < LAM_THRESH
+
+
+# ---------------------------------------------------------------------------
+# debiased-estimator error vs the centralized lasso oracle
+# ---------------------------------------------------------------------------
+
+def test_regression_debiased_error_tracks_centralized_oracle():
+    """The one-round estimator must not give up accuracy for its
+    communication budget: beta_tilde's L2 error stays within a fixed
+    factor of the centralized per-task lasso AND the centralized group
+    lasso, each solved on all the data at the theory lambda.
+    (Empirically DSML beats both here — factor 1.0 with ~2.5x margin.)
+    """
+    data, res = _fit_regression(0)
+    err_dsml = float(estimation_error(res.beta_tilde.T, data.B))
+    Sigmas, cs = sufficient_stats(data.Xs, data.ys)
+    B_lasso = solve_lasso_eq2(Sigmas, cs, 4.0 * _base_lam(N_REG)).T
+    err_lasso = float(estimation_error(B_lasso, data.B))
+    B_group = group_lasso(data.Xs, data.ys, 2.0 * _base_lam(N_REG))
+    err_group = float(estimation_error(B_group, data.B))
+    assert err_dsml <= 1.0 * err_lasso, (err_dsml, err_lasso)
+    assert err_dsml <= 1.0 * err_group, (err_dsml, err_group)
+
+
+def test_logistic_debiased_error_tracks_centralized_oracle():
+    data, res = _fit_logistic(0)
+    err_dsml = float(estimation_error(res.beta_tilde.T, data.B))
+    B_lasso = solve_logistic_lasso_batched(data.Xs, data.ys,
+                                           _base_lam(N_LOG), iters=400).T
+    err_lasso = float(estimation_error(B_lasso, data.B))
+    assert err_dsml <= 1.0 * err_lasso, (err_dsml, err_lasso)
+
+
+# ---------------------------------------------------------------------------
+# rate sanity: more data per task must shrink the error
+# ---------------------------------------------------------------------------
+
+def test_regression_error_scales_down_with_n():
+    """4x the samples must at least halve the thresholded-debiased
+    error (the sqrt(s log p / n) rate predicts exactly 2x)."""
+    data_small, res_small = _fit_regression(0, n=60)
+    err_small = float(estimation_error(res_small.beta_tilde.T,
+                                       data_small.B))
+    data_big, res_big = _fit_regression(0, n=240)
+    err_big = float(estimation_error(res_big.beta_tilde.T, data_big.B))
+    assert err_big < 0.5 * err_small, (err_big, err_small)
