@@ -32,6 +32,7 @@ bench-smoke:
 	$(PY) benchmarks/communication.py
 	$(PY) benchmarks/fig1_regression.py --smoke
 	$(PY) benchmarks/fig2_classification.py --smoke
+	$(PY) benchmarks/largep_logistic.py --smoke
 
 # machine-readable kernel bench rows, tracked across PRs; the committed
 # BENCH_kernels.json is the perf baseline check-regression gates on

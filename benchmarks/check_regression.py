@@ -38,6 +38,11 @@ FLOORS = (
     ("kernel_fista_fused_over_two_op", 0.85),
     ("logistic_solve_batched_over_vmap", 0.85),
     ("logistic_grad_fused_over_unfused", 0.85),
+    # the feature-tiled large-p slab (p = 8192, past the old full-lane
+    # cliff): fusion must keep paying for itself once the X stream is
+    # two-phase — the unfused pair re-streams X from HBM AND round-trips
+    # the residual
+    ("logistic_grad_fused_over_unfused_p8192", 0.85),
     ("rank_update_fused_over_unfused", 0.85),
 )
 

@@ -151,6 +151,32 @@ def main():
     rows.append(f"logistic_grad_fused_over_unfused,{us_gf:.0f},"
                 f"speedup={r_gu:.2f}x")
 
+    # feature-tiled large-p slab (DESIGN.md §12): p = 8192 is past the
+    # old full-lane cliff that routed every large-p gradient to the
+    # oracle; the two-phase fused sweep vs the unfused pair at the same
+    # budgeted (bn, bp) tiling, XLA einsum oracle for context
+    from repro.kernels.logistic_grad.ops import (
+        resolve_logistic_blocks, routes_to_oracle,
+    )
+    m_l, n_l, p_l = 4, 128, 8192
+    assert not routes_to_oracle(n_l, p_l), "large-p must stay on-kernel"
+    bn_l, bp_l = resolve_logistic_blocks(n_l, p_l)
+    Xl = jax.random.normal(jax.random.PRNGKey(12), (m_l, n_l, p_l))
+    yl = jnp.sign(jax.random.normal(jax.random.PRNGKey(13), (m_l, n_l)))
+    Bl = jax.random.normal(jax.random.PRNGKey(14), (m_l, p_l)) * 0.02
+    # g_fused/g_unfused/g_ref from the p=512 pair are shape-generic
+    us_lf, us_lu, r_lu = _interleaved_pair(g_fused, g_unfused, Xl, yl, Bl)
+    us_lr = _time(g_ref, Xl, yl, Bl, reps=3)
+    flops_l = 4 * m_l * n_l * p_l
+    rows.append(f"logistic_grad_fused_m4_n128_p8192,{us_lf:.0f},"
+                f"flops={flops_l},bn={bn_l},bp={bp_l}")
+    rows.append(f"logistic_grad_unfused_m4_n128_p8192,{us_lu:.0f},"
+                f"flops={flops_l}")
+    rows.append(f"logistic_grad_xla_ref_m4_n128_p8192,{us_lr:.0f},"
+                f"flops={flops_l}")
+    rows.append(f"logistic_grad_fused_over_unfused_p8192,{us_lf:.0f},"
+                f"speedup={r_lu:.2f}x")
+
     # fused rank-n statistics update (streaming ingest hot path): Sigma
     # and c from ONE pass over the sample chunk vs the unfused
     # two-dispatch pair (covariance kernel + correlation kernel, X

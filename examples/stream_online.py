@@ -33,7 +33,10 @@ def draw_chunk(key, chol, B, n, sigma=1.0):
     return Xs, ys
 
 
-def main():
+def main(argv=None):
+    """Run the stream demo; returns the headline metrics dict so the
+    golden-band smoke test (tests/test_figures_smoke.py) can pin them —
+    same `--smoke` + committed-band pattern as the figure drivers."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--m", type=int, default=8)
     ap.add_argument("--p", type=int, default=128)
@@ -47,7 +50,7 @@ def main():
                          "support moves")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.smoke:
         args.m, args.p, args.s = 4, 48, 5
         args.chunk_size, args.chunks = 64, 8
@@ -63,7 +66,8 @@ def main():
     svc = StreamingDsmlService(
         args.m, args.p, lam=4 * base, mu=base, Lam=1.0,
         decay=args.decay, refit_every=2 * args.chunk_size,
-        lasso_iters=400, debias_iters=400, mesh=mesh)
+        lasso_iters=400, debias_iters=400, chunk_n=args.chunk_size,
+        mesh=mesh)
 
     key = jax.random.PRNGKey(0)
     k_a, k_b, key = jax.random.split(key, 3)
@@ -73,6 +77,7 @@ def main():
           f"{args.chunks} chunks x {args.chunk_size} samples, "
           f"decay={args.decay}, shift at chunk {shift_chunk}")
 
+    refits_during_stream = 0
     for i in range(args.chunks):
         if i == shift_chunk:
             chol, B, support = make_regime(k_b, args.p, args.m, args.s)
@@ -85,6 +90,7 @@ def main():
         if info is not None:
             h = int(hamming(svc.state.support, support))
             err = float(jnp.max(jnp.abs(svc.state.beta_tilde - B.T)))
+            refits_during_stream += 1
             print(f"[chunk {i:3d} | eff samples {svc.samples_seen:7.0f}] "
                   f"refit gen={int(info.generation)} |S|={int(info.support_size)} "
                   f"jaccard={float(info.jaccard):.2f} hamming={h} "
@@ -92,9 +98,17 @@ def main():
 
     svc.refit()
     h = int(hamming(svc.state.support, support))
+    err = float(jnp.max(jnp.abs(svc.state.beta_tilde - B.T)))
     print(f"final: generation {svc.generation}, support hamming vs current "
           f"regime = {h} (decay {'forgets' if args.decay < 1 else 'keeps'} "
           f"the old regime)")
+    return {
+        "final_hamming": h,
+        "final_est_err": err,
+        "generations": int(svc.generation),
+        "refits_during_stream": refits_during_stream,
+        "samples_seen": float(svc.samples_seen),
+    }
 
 
 if __name__ == "__main__":

@@ -53,10 +53,9 @@ from repro.kernels.ista_step.ops import fista_step_batched
 from repro.kernels.ista_step.ref import (
     fista_step_batched_ref, ista_step_batched_ref,
 )
-from repro.kernels.common import is_ragged_samples
 from repro.kernels.logistic_grad.ops import logistic_grad, routes_to_oracle
 from repro.kernels.logistic_grad.ref import logistic_grad_ref
-from repro.kernels.rank_update.ops import rank_update
+from repro.kernels.rank_update.ops import rank_routes_to_oracle, rank_update
 
 
 def power_iteration_batched(Sigmas: jnp.ndarray, iters: int = 64) -> jnp.ndarray:
@@ -129,9 +128,10 @@ def resolve_block_policy(m: int, p: int, r: int, dtype, block,
     triple) always wins; otherwise, when the kernel path is active, the
     autotuned winner for (backend, m, p, r, dtype) is looked up (and
     timed once on a miss). The oracle path never consults the cache."""
-    from repro.kernels.ista_step.ops import is_ragged
+    from repro.kernels.ista_step.ops import is_ragged, resolve_blocks
     if block is not None:
-        return block
+        resolve_blocks(p, r, block)   # malformed blocks raise on EVERY
+        return block                  # path, not just the kernel one
     if not use_kernel or is_ragged(p, r):
         # the kernel dispatcher routes ragged shapes to the jnp oracle,
         # which ignores blocks — never pay (or pollute) a sweep for them
@@ -143,13 +143,17 @@ def resolve_block_policy(m: int, p: int, r: int, dtype, block,
 def resolve_logistic_block_policy(m: int, n: int, p: int, dtype, block,
                                   use_kernel: bool):
     """Block policy for the fused logistic-gradient kernel: an explicit
-    `block` (int bn) wins; otherwise the autotuned winner for
-    (backend, m, n, p, dtype) when the kernel path is active. Same
-    shape-routing caveats as `resolve_block_policy`."""
+    `block` (int bn or (bn, bp) pair) wins; otherwise the autotuned
+    (bn, bp) winner for (backend, m, n, p, dtype) when the kernel path
+    is active. Same shape-routing caveats as `resolve_block_policy`:
+    shapes the dispatcher routes to the oracle (ragged, sliver tiles,
+    over the per-tile VMEM budget) never pay or pollute a sweep."""
     if block is not None:
+        from repro.kernels.logistic_grad.ops import resolve_logistic_blocks
+        resolve_logistic_blocks(n, p, block)   # validate on every path
         return block
     if not use_kernel or routes_to_oracle(n, p):
-        return 128
+        return None
     from repro.kernels.autotune import autotune_logistic_block
     return autotune_logistic_block(m, n, p, dtype=dtype)
 
@@ -161,7 +165,7 @@ def resolve_rank_block_policy(m: int, n: int, p: int, dtype, block,
     for (backend, m, n, p, dtype) when the kernel path is active."""
     if block is not None:
         return block
-    if not use_kernel or is_ragged_samples(n, p):
+    if not use_kernel or rank_routes_to_oracle(n, p):
         return 128
     from repro.kernels.autotune import autotune_rank_block
     return autotune_rank_block(m, n, p, dtype=dtype)
@@ -342,9 +346,11 @@ def solve_logistic_lasso_batched(Xs: jnp.ndarray, ys: jnp.ndarray, lam, *,
     kernel path (`use_kernel`, default only on TPU) the gradient is the
     fused Pallas `kernels/logistic_grad` kernel — forward matvec,
     sigmoid residual, and back-projection in one dispatch over each
-    resident X tile; otherwise it is the bitwise-identical jnp einsum
-    oracle (the fast CPU path). `block` is an int sample tile bn or
-    None for the autotuned per-shape policy (DESIGN.md §11).
+    resident X slab (feature-tiled past the VMEM budget, so the p >> n
+    regime stays on the kernel); otherwise it is the bitwise-identical
+    jnp einsum oracle (the fast CPU path). `block` is an int sample
+    tile bn, a (bn, bp) pair, or None for the autotuned per-shape
+    policy (DESIGN.md §11-§12).
 
     `beta0` (m, p) warm-starts the iterates (streaming refits restart
     from the previous generation). `prox` overrides the elementwise

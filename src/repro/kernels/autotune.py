@@ -6,7 +6,8 @@ and their best tilings depend on the backend and dtype:
   * `fista_step` — the fused ISTA/FISTA solver step, swept over
     (bp, br, bk) for a (m, p, r) solve;
   * `logistic_grad` — the fused all-tasks logistic gradient, swept over
-    the sample tile bn for a (m, n, p) batch;
+    (bn, bp) sample/feature tiles for a (m, n, p) batch (large-p shapes
+    sweep real feature tilings under the per-tile VMEM budget);
   * `rank_update` — the fused rank-n sufficient-statistics update,
     swept over (bp, bn) for a (m, n, p) chunk.
 
@@ -29,6 +30,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import time
 from pathlib import Path
 from typing import Callable, Dict, List, Tuple
@@ -39,6 +41,10 @@ import jax.numpy as jnp
 from repro.kernels.ista_step.kernel import fista_step_batched_pallas
 from repro.kernels.ista_step.ops import resolve_blocks
 from repro.kernels.logistic_grad.kernel import logistic_grad_pallas
+from repro.kernels.logistic_grad.ops import (
+    LOGISTIC_VMEM_BUDGET, kernel_vmem_bytes, resolve_logistic_blocks,
+    routes_to_oracle,
+)
 from repro.kernels.rank_update.kernel import rank_update_pallas
 
 _REPO_ROOT = Path(__file__).resolve().parents[3]
@@ -74,11 +80,23 @@ def _migrate(entries: dict) -> Tuple[dict, bool]:
     """Namespace legacy keys. Files written before the per-kernel
     namespace held only fista sweeps under bare "<backend>_..." keys;
     prefix them so old caches keep serving (and never shadow or absorb
-    the new kernels' entries)."""
+    the new kernels' entries). Pre-feature-tiling `logistic_grad/`
+    entries were a bare int bn with an implicit full-lane bp = p: widen
+    them through the budgeted resolver ((n, p) read back off the key),
+    NOT to a literal [bn, p] — a legacy winner like bn = 256 at
+    p = 4096 pairs with a full-lane slab that busts the new VMEM
+    budget, and a migrated entry the dispatcher silently routes to the
+    oracle would permanently lose that shape its kernel path."""
     migrated, changed = {}, False
     for k, v in entries.items():
         if "/" not in k:
             k, changed = f"fista_step/{k}", True
+        if k.startswith("logistic_grad/") and not isinstance(v, list):
+            dims = re.search(r"_n(\d+)_p(\d+)_", k)
+            if dims:
+                n_k, p_k = int(dims.group(1)), int(dims.group(2))
+                v = list(resolve_logistic_blocks(n_k, p_k, int(v)))
+                changed = True
         migrated[k] = v
     return migrated, changed
 
@@ -120,10 +138,20 @@ def block_candidates(p: int, r: int) -> List[Tuple[int, int, int]]:
     return [(bp, br, bp) for bp in bps for br in brs]
 
 
-def logistic_candidates(n: int) -> List[int]:
-    """Legal sample tiles bn to sweep for a (m, n, p) logistic-gradient
-    batch (the feature axis rides whole in the lane dimension)."""
-    return _divisor_candidates(n)
+def logistic_candidates(n: int, p: int) -> List[Tuple[int, int]]:
+    """Legal (bn, bp) tilings to sweep for a (m, n, p) logistic-gradient
+    batch, filtered to the kernel's per-tile VMEM budget. The feature
+    axis adds the large lane tiles (512..4096) and the full-lane bp = p
+    layout on top of the shared candidate grid, so small p sweeps the
+    historical resident slab and large p sweeps real feature tilings."""
+    bps = _divisor_candidates(p)
+    bps += [b for b in (512, 1024, 2048, 4096)
+            if b < p and p % b == 0 and b not in bps]
+    if p not in bps:
+        bps.append(p)
+    pairs = [(bn, bp) for bn in _divisor_candidates(n) for bp in bps
+             if kernel_vmem_bytes(p, bn, bp) <= LOGISTIC_VMEM_BUDGET]
+    return pairs or [resolve_logistic_blocks(n, p)]
 
 
 def rank_candidates(n: int, p: int) -> List[Tuple[int, int]]:
@@ -206,7 +234,8 @@ def warmup_cache(m: int, p: int, n: int | None = None, *,
     dims hits — the r=1 lasso batch and the r=p multi-RHS debias solve,
     plus (when the chunk size `n` is known) the rank-n ingest and
     logistic-gradient shapes — so later JITTED engine calls find a warm
-    cache.
+    cache. Large-p logistic shapes (past the old full-lane cliff) warm
+    like any other now that the kernel feature-tiles its slabs.
 
     This is the intended production entry point: every in-repo solver
     is jitted, and the sweep refuses to run under an active trace
@@ -254,21 +283,30 @@ def autotune_block(m: int, p: int, r: int, *, dtype=jnp.float32,
 def autotune_logistic_block(m: int, n: int, p: int, *, dtype=jnp.float32,
                             backend: str | None = None,
                             interpret: bool | None = None,
-                            candidates: List[int] | None = None,
-                            reps: int = 2, use_disk: bool = True) -> int:
-    """Winning sample tile bn for a (m, n, p) fused logistic-gradient
-    batch (kernel namespace `logistic_grad`)."""
+                            candidates: List[Tuple[int, int]] | None = None,
+                            reps: int = 2, use_disk: bool = True
+                            ) -> Tuple[int, int]:
+    """Winning (bn, bp) tiling for a (m, n, p) fused logistic-gradient
+    batch (kernel namespace `logistic_grad`). Feature-tiled large-p
+    shapes sweep too — the old full-lane p cliff routed them to the
+    oracle before a sweep could even run. Shapes the dispatcher will
+    not serve (ragged, sliver, over-budget) return the budgeted
+    default untimed so the cache is never polluted with them."""
+    default = resolve_logistic_blocks(n, p)
+    if routes_to_oracle(n, p):
+        return default
+
     def make_sweep(interp):
         k0, k1 = jax.random.split(jax.random.PRNGKey(0))
         Xs = jax.random.normal(k0, (m, n, p), dtype)
         ys = jnp.sign(jax.random.normal(k1, (m, n), dtype))
         B = jnp.zeros((m, p), dtype)
-        return lambda bn: lambda: logistic_grad_pallas(
-            Xs, ys, B, bn=bn, interpret=interp)
+        return lambda cand: lambda: logistic_grad_pallas(
+            Xs, ys, B, bn=cand[0], bp=cand[1], interpret=interp)
 
     return _autotune(
-        "logistic_grad", {"m": m, "n": n, "p": p}, min(128, n),
-        logistic_candidates(n) if candidates is None else candidates,
+        "logistic_grad", {"m": m, "n": n, "p": p}, default,
+        logistic_candidates(n, p) if candidates is None else candidates,
         make_sweep, dtype=dtype, backend=backend, interpret=interpret,
         reps=reps, use_disk=use_disk)
 
@@ -280,8 +318,15 @@ def autotune_rank_block(m: int, n: int, p: int, *, dtype=jnp.float32,
                         reps: int = 2, use_disk: bool = True
                         ) -> Tuple[int, int]:
     """Winning (bp, bn) tiling for a (m, n, p) fused rank-n statistics
-    update (kernel namespace `rank_update`)."""
-    from repro.kernels.rank_update.ops import resolve_rank_blocks
+    update (kernel namespace `rank_update`). As in the logistic sweep,
+    shapes the dispatcher routes to the oracle (ragged, sliver tiles)
+    return the default untimed so the cache is never polluted with
+    unservable keys."""
+    from repro.kernels.rank_update.ops import (
+        rank_routes_to_oracle, resolve_rank_blocks,
+    )
+    if rank_routes_to_oracle(n, p):
+        return resolve_rank_blocks(n, p, 128)
 
     def make_sweep(interp):
         k0, k1 = jax.random.split(jax.random.PRNGKey(0))

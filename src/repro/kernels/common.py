@@ -24,6 +24,57 @@ def fit_block(size: int, block: int) -> int:
     return b
 
 
+# the minimum tile worth running a grid over: when an axis has no
+# 8-aligned divisor at or above this (relative to the request), the
+# best tile a TPU grid could legally use is a sliver and the grid it
+# implies is quietly catastrophic — e.g. size 1016 = 8 * 127 against a
+# 128 request: the divisor scan finds 127 (which breaks the 8-row
+# sublane alignment) and the best ALIGNED divisor is 8, a 127-step
+# sliver sweep where the caller asked for ~8 steps of 128
+MIN_TILE = 32
+
+
+def aligned_fit_block(size: int, block: int) -> int:
+    """Largest divisor of `size` that is <= `block` AND keeps the TPU's
+    8-row alignment (the tile the hardware grid could actually use).
+    Falls back to the plain divisor scan when the axis itself is not
+    8-aligned (such shapes are ragged and never reach a kernel)."""
+    if size % 8 or block < 8:
+        return fit_block(size, block)
+    return 8 * fit_block(size // 8, block // 8)
+
+
+def validate_block(block, arity: int, doc: str) -> tuple:
+    """Shared `block=`-argument validation for the kernel dispatchers:
+    an int broadcasts to all axes, a tuple must have exactly `arity`
+    int entries; anything else — bools, floats, wrong-arity tuples —
+    raises instead of being silently coerced (the historical `block[0]`
+    bug let a rank-style pair tile the wrong axes). Entries must be
+    POSITIVE — a zero block would divide-by-zero inside the divisor
+    scan and a negative one would silently reroute to the oracle. `doc`
+    names the expected tuple form in the error."""
+    def ok(b):
+        return isinstance(b, int) and not isinstance(b, bool) and b >= 1
+    if ok(block):
+        return (block,) * arity
+    if (isinstance(block, tuple) and len(block) == arity
+            and all(ok(b) for b in block)):
+        return block
+    raise TypeError(
+        f"block must be a positive int or a {doc} tuple of positive "
+        f"ints — got {block!r}")
+
+
+def degrades_to_slivers(size: int, block: int) -> bool:
+    """True when fitting the requested `block` to `size` degrades to a
+    sliver tile: the largest aligned divisor falls below MIN_TILE AND
+    below a quarter of the request (a >4x longer grid than asked for).
+    Such shapes belong to the oracle — an explicitly tiny request, an
+    axis that IS tiny, or a modest clip (48-on-80 -> 40) is honoured;
+    only the silent collapse (128-on-1016 -> 8) is routed away."""
+    return aligned_fit_block(size, block) < min(block // 4, size, MIN_TILE)
+
+
 def is_ragged_samples(n: int, p: int) -> bool:
     """THE routing predicate for the sample-streaming kernels (logistic
     gradient, rank-n update): shapes whose sample or feature axis the

@@ -13,23 +13,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import aligned_fit_block, validate_block
+from repro.kernels.common import on_tpu as _on_tpu
 from repro.kernels.ista_step.kernel import (
     fista_step_batched_pallas, ista_step_batched_pallas, ista_step_pallas,
 )
 from repro.kernels.ista_step.ref import (
     fista_step_batched_ref, ista_step_batched_ref, ista_step_ref,
 )
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _fit_block(size: int, block: int) -> int:
-    b = min(block, size)
-    while size % b:
-        b //= 2
-    return b
 
 
 def is_ragged(p: int, r: int) -> bool:
@@ -46,13 +37,15 @@ def resolve_blocks(p: int, r: int, block) -> tuple:
     `block` is either one int (square bp = bk tiles, the historical
     policy) or an explicit (bp, br, bk) triple, e.g. an autotuned winner
     from `repro.kernels.autotune`; each entry is clipped to the largest
-    divisor of its dimension so ragged-adjacent shapes stay legal.
+    aligned divisor of its dimension so ragged-adjacent shapes stay
+    legal (the old local halving clip bottomed non-divisor requests
+    like 48-on-80 out at single-element tiles).
+    Anything else raises — a wrong-arity tuple (e.g. a (bp, bn) rank
+    pair) must not be silently unpacked into the wrong axes.
     """
-    if isinstance(block, tuple):
-        bp, br, bk = block
-    else:
-        bp = br = bk = block
-    return _fit_block(p, bp), _fit_block(r, br), _fit_block(p, bk)
+    bp, br, bk = validate_block(block, 3, "(bp, br, bk)")
+    return (aligned_fit_block(p, bp), aligned_fit_block(r, br),
+            aligned_fit_block(p, bk))
 
 
 def ista_step_batched(Sigmas, betas, cs, etas, lam, *, block: int = 128,
@@ -70,11 +63,13 @@ def ista_step_batched(Sigmas, betas, cs, etas, lam, *, block: int = 128,
         betas = betas[..., None]
         cs = cs[..., None]
     m, p, r = betas.shape
+    # resolve (and so validate) blocks before the ragged short-circuit:
+    # a malformed block must raise on every path
+    bp, br, bk = resolve_blocks(p, r, block)
     interp = (not _on_tpu()) if interpret is None else interpret
     if is_ragged(p, r):
         out = ista_step_batched_ref(Sigmas, betas, cs, etas, lam)
     else:
-        bp, br, bk = resolve_blocks(p, r, block)
         out = ista_step_batched_pallas(Sigmas, betas, cs, etas, lam,
                                        bp=bp, br=br, bk=bk, interpret=interp)
     return out[..., 0] if squeeze else out
@@ -95,11 +90,11 @@ def fista_step_batched(Sigmas, zs, xs, cs, etas, lam, theta, *,
     if squeeze:
         zs, xs, cs = zs[..., None], xs[..., None], cs[..., None]
     m, p, r = zs.shape
+    bp, br, bk = resolve_blocks(p, r, block)    # validate on every path
     interp = (not _on_tpu()) if interpret is None else interpret
     if is_ragged(p, r):
         xn, zn = fista_step_batched_ref(Sigmas, zs, xs, cs, etas, lam, theta)
     else:
-        bp, br, bk = resolve_blocks(p, r, block)
         xn, zn = fista_step_batched_pallas(Sigmas, zs, xs, cs, etas, lam,
                                            theta, bp=bp, br=br, bk=bk,
                                            interpret=interp)
@@ -114,14 +109,13 @@ def ista_step(Sigma, beta, c, eta, lam, *, block: int = 128,
         beta = beta[:, None]
         c = c[:, None]
     p, r = beta.shape
+    bp, br, bk = resolve_blocks(p, r, block)    # validate on every path
     interp = (not _on_tpu()) if interpret is None else interpret
     if is_ragged(p, r):
         out = ista_step_ref(Sigma, beta, c, eta, lam)   # ragged fallback
     else:
-        bp = _fit_block(p, block)
-        br = _fit_block(r, block)
         out = ista_step_pallas(Sigma, beta, c, eta, lam, bp=bp, br=br,
-                               bk=bp, interpret=interp)
+                               bk=bk, interpret=interp)
     return out[:, 0] if squeeze else out
 
 

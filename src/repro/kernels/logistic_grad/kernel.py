@@ -5,24 +5,41 @@ logistic loss at the current iterate:
 
     z = X b,   r = y * sigmoid(-y z),   g = -X' r / n.
 
-Tiling (DESIGN.md §11): the grid is (m, nj) — tasks outermost, sample
-tiles of `bn` rows innermost. Each (t, j) step loads one (bn, p) slab
-of X_t with the FULL feature dimension as the lane axis, so the forward
-matvec `X_j @ b`, the sigmoid residual, and the back-projection
-`X_j' r_j` all fire on the same resident VMEM tile — X is streamed
-exactly once and z/r never round-trip through HBM. The per-task
-gradient accumulates in a (p, 1) f32 VMEM scratch across the j sweep
-and the epilogue scales by -1/n (a compile-time constant) on the last
-sample tile. The layout trades p-tiling for single-pass fusion: a slab
-is bn*p elements of VMEM, right for the paper regime (p up to a few
-thousand); the dispatcher routes larger/ragged shapes to the jnp
+Tiling (DESIGN.md §11-§12): X slabs are (bn, bp) — the sample axis
+tiled in `bn`-row strips AND the feature axis tiled in `bp`-lane
+strips, so no shape keeps the full feature dimension resident and the
+kernel serves the paper's own p >> n regime past the old full-lane
+VMEM cliff. Two layouts share one dispatch convention:
+
+  * RESIDENT (bp == p, the small-p fast path): grid (m, nj). Each
+    (t, j) step loads one (bn, p) slab and fires the forward matvec,
+    the sigmoid residual, and the back-projection on the same resident
+    tile — X streams through VMEM exactly once. This is bitwise the
+    pre-tiling kernel, so existing shapes see zero perf or numerics
+    change.
+  * FEATURE-TILED (bp < p): grid (m, nj, 2*pi). For each sample tile j
+    the inner axis makes TWO passes over the pi feature tiles: a
+    forward sweep accumulating the partial matvec X_j[:, i] @ b_i into
+    a (bn, 1) f32 VMEM carry, then — once the carry holds the complete
+    z_j and the sigmoid residual can fire — a backward sweep in
+    REVERSE feature order (i = 2*pi-1-k), so the turnaround tile
+    (i = pi-1) is still resident in VMEM and is never refetched. Each
+    backward visit adds X_j[:, i]' r_j into row i of a (pi, bp, 1) f32
+    gradient accumulator that persists across the j sweep; the
+    epilogue scales by -1/n (a compile-time constant) on the last
+    sample tile. z and r never exist in HBM.
+
+The dispatcher (`ops.py`) picks (bn, bp) via the budgeted block policy
+— full-lane whenever the slab fits the per-tile VMEM budget, tiled
+past it — and routes ragged / sliver / over-budget shapes to the jnp
 oracle.
 
 `logistic_z_pallas` / `logistic_backproject_pallas` are the UNFUSED
 halves (forward matvec only / back-projection of a precomputed
-residual). They exist as the two-dispatch baseline the fused kernel is
-benchmarked against (benchmarks/kernels_bench.py) — same tiles, same
-arithmetic, one extra HBM round trip for the residual.
+residual), feature-tiled the same way. They exist as the two-dispatch
+baseline the fused kernel is benchmarked against
+(benchmarks/kernels_bench.py) — same tiles, same arithmetic, one extra
+HBM round trip for the residual.
 """
 from __future__ import annotations
 
@@ -34,8 +51,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _logistic_grad_kernel(x_ref, y_ref, b_ref, out_ref, acc_ref, *,
+def _resident_grad_kernel(x_ref, y_ref, b_ref, out_ref, acc_ref, *,
                           nj: int, inv_n: float):
+    """bp == p: full feature axis in lanes, one pass per sample tile."""
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -55,88 +73,158 @@ def _logistic_grad_kernel(x_ref, y_ref, b_ref, out_ref, acc_ref, *,
         out_ref[0] = (-inv_n * acc_ref[...]).astype(out_ref.dtype)
 
 
-def _logistic_z_kernel(x_ref, b_ref, z_ref):
-    z_ref[0] = jnp.dot(x_ref[0], b_ref[0].astype(jnp.float32),
-                       preferred_element_type=jnp.float32
-                       ).astype(z_ref.dtype)
+def _tiled_grad_kernel(x_ref, y_ref, b_ref, out_ref, z_acc, g_acc, *,
+                       pi: int, nj: int, inv_n: float):
+    """bp < p: forward feature sweep fills the z carry, the reversed
+    backward sweep back-projects off the same (turnaround-resident)
+    tiles into the per-feature-tile gradient accumulator."""
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init_g():
+        g_acc[...] = jnp.zeros_like(g_acc)
+
+    @pl.when(k == 0)
+    def _init_z():
+        z_acc[...] = jnp.zeros_like(z_acc)
+
+    x = x_ref[0]                                        # (bn, bp)
+
+    @pl.when(k < pi)
+    def _forward():
+        z_acc[...] += jnp.dot(x, b_ref[0].astype(jnp.float32),
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(k >= pi)
+    def _backward():
+        i = 2 * pi - 1 - k                              # reverse sweep
+        y = y_ref[0].astype(jnp.float32)                # (bn, 1)
+        r = y * jax.nn.sigmoid(-y * z_acc[...])
+        g_acc[i] += jnp.dot(x.T, r,
+                            preferred_element_type=jnp.float32)  # (bp, 1)
+
+        @pl.when(j == nj - 1)
+        def _epilogue():
+            out_ref[0] = (-inv_n * g_acc[i]).astype(out_ref.dtype)
+
+
+def _logistic_z_kernel(x_ref, b_ref, z_ref, z_acc, *, pi: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        z_acc[...] = jnp.zeros_like(z_acc)
+
+    z_acc[...] += jnp.dot(x_ref[0], b_ref[0].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == pi - 1)
+    def _epilogue():
+        z_ref[0] = z_acc[...].astype(z_ref.dtype)
 
 
 def _backproject_kernel(x_ref, r_ref, out_ref, acc_ref, *, nj: int,
                         inv_n: float):
-    j = pl.program_id(1)
+    k = pl.program_id(2)
 
-    @pl.when(j == 0)
+    @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(x_ref[0].T, r_ref[0].astype(jnp.float32),
                             preferred_element_type=jnp.float32)
 
-    @pl.when(j == nj - 1)
+    @pl.when(k == nj - 1)
     def _epilogue():
         out_ref[0] = (-inv_n * acc_ref[...]).astype(out_ref.dtype)
 
 
-def _grid_specs(m, n, p, bn):
-    nj = n // bn
-    x_spec = pl.BlockSpec((1, bn, p), lambda t, j: (t, j, 0))
-    col_spec = pl.BlockSpec((1, bn, 1), lambda t, j: (t, j, 0))
-    task_p_spec = pl.BlockSpec((1, p, 1), lambda t, j: (t, 0, 0))
-    return (m, nj), nj, x_spec, col_spec, task_p_spec
+def _check_blocks(n, p, bn, bp):
+    assert n % bn == 0 and p % bp == 0, (n, p, bn, bp)
+    return n // bn, p // bp
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
-def logistic_grad_pallas(Xs, ys, B, *, bn: int = 128,
+@functools.partial(jax.jit, static_argnames=("bn", "bp", "interpret"))
+def logistic_grad_pallas(Xs, ys, B, *, bn: int = 128, bp: int | None = None,
                          interpret: bool = False):
     """Fused all-tasks logistic gradient in ONE pallas call.
 
     Xs: (m, n, p); ys: (m, n) in {-1, +1}; B: (m, p). Returns g (m, p)
-    = -X'(y sigmoid(-y Xb))/n per task. `bn` tiles the sample axis; the
-    feature axis rides whole in the lane dimension.
+    = -X'(y sigmoid(-y Xb))/n per task. `bn` tiles the sample axis,
+    `bp` the feature axis (None = full-lane bp = p). bp == p takes the
+    resident single-pass layout; bp < p the two-phase feature-tiled
+    sweep (forward matvec carry, reversed back-projection).
     """
     m, n, p = Xs.shape
     bn = min(bn, n)
-    assert n % bn == 0, (m, n, p, bn)
-    grid, nj, x_spec, col_spec, task_p_spec = _grid_specs(m, n, p, bn)
+    bp = p if bp is None else min(bp, p)
+    nj, pi = _check_blocks(n, p, bn, bp)
+    y_spec = pl.BlockSpec((1, bn, 1), lambda t, j, *k: (t, j, 0))
+    out_dtype = jax.ShapeDtypeStruct((m, p, 1), B.dtype)
+    if pi == 1:
+        x_spec = pl.BlockSpec((1, bn, p), lambda t, j: (t, j, 0))
+        task_p = pl.BlockSpec((1, p, 1), lambda t, j: (t, 0, 0))
+        out = pl.pallas_call(
+            functools.partial(_resident_grad_kernel, nj=nj, inv_n=1.0 / n),
+            grid=(m, nj),
+            in_specs=[x_spec, y_spec, task_p],
+            out_specs=task_p,
+            out_shape=out_dtype,
+            scratch_shapes=[pltpu.VMEM((p, 1), jnp.float32)],
+            interpret=interpret,
+        )(Xs, ys[..., None], B[..., None])
+        return out[..., 0]
+
+    # feature tile index: forward k in [0, pi), then the backward sweep
+    # revisits in reverse so the turnaround tile is still resident
+    fi = lambda k: jnp.where(k < pi, k, 2 * pi - 1 - k)
+    x_spec = pl.BlockSpec((1, bn, bp), lambda t, j, k: (t, j, fi(k)))
+    tile_p = pl.BlockSpec((1, bp, 1), lambda t, j, k: (t, fi(k), 0))
     out = pl.pallas_call(
-        functools.partial(_logistic_grad_kernel, nj=nj, inv_n=1.0 / n),
-        grid=grid,
-        in_specs=[x_spec, col_spec, task_p_spec],
-        out_specs=task_p_spec,
-        out_shape=jax.ShapeDtypeStruct((m, p, 1), B.dtype),
-        scratch_shapes=[pltpu.VMEM((p, 1), jnp.float32)],
+        functools.partial(_tiled_grad_kernel, pi=pi, nj=nj, inv_n=1.0 / n),
+        grid=(m, nj, 2 * pi),
+        in_specs=[x_spec, y_spec, tile_p],
+        out_specs=tile_p,
+        out_shape=out_dtype,
+        scratch_shapes=[pltpu.VMEM((bn, 1), jnp.float32),
+                        pltpu.VMEM((pi, bp, 1), jnp.float32)],
         interpret=interpret,
     )(Xs, ys[..., None], B[..., None])
     return out[..., 0]
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bn", "bp", "interpret"))
 def logistic_grad_unfused_pallas(Xs, ys, B, *, bn: int = 128,
+                                 bp: int | None = None,
                                  interpret: bool = False):
     """The two-dispatch baseline: forward-matvec kernel, jnp residual,
-    back-projection kernel. Same tiles and arithmetic as the fused
-    kernel, plus one (m, n) round trip through HBM for the residual —
-    the pre-fusion cost the benchmark pair tracks."""
+    back-projection kernel. Same (bn, bp) tiles and arithmetic as the
+    fused kernel, plus one (m, n) round trip through HBM for the
+    residual — the pre-fusion cost the benchmark pair tracks."""
     m, n, p = Xs.shape
     bn = min(bn, n)
-    assert n % bn == 0, (m, n, p, bn)
-    grid, nj, x_spec, col_spec, task_p_spec = _grid_specs(m, n, p, bn)
+    bp = p if bp is None else min(bp, p)
+    nj, pi = _check_blocks(n, p, bn, bp)
     z = pl.pallas_call(
-        _logistic_z_kernel,
-        grid=grid,
-        in_specs=[x_spec, task_p_spec],
-        out_specs=col_spec,
+        functools.partial(_logistic_z_kernel, pi=pi),
+        grid=(m, nj, pi),
+        in_specs=[pl.BlockSpec((1, bn, bp), lambda t, j, k: (t, j, k)),
+                  pl.BlockSpec((1, bp, 1), lambda t, j, k: (t, k, 0))],
+        out_specs=pl.BlockSpec((1, bn, 1), lambda t, j, k: (t, j, 0)),
         out_shape=jax.ShapeDtypeStruct((m, n, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, 1), jnp.float32)],
         interpret=interpret,
     )(Xs, B[..., None])[..., 0]
     r = ys * jax.nn.sigmoid(-ys * z.astype(ys.dtype))
     out = pl.pallas_call(
         functools.partial(_backproject_kernel, nj=nj, inv_n=1.0 / n),
-        grid=grid,
-        in_specs=[x_spec, col_spec],
-        out_specs=task_p_spec,
+        grid=(m, pi, nj),
+        in_specs=[pl.BlockSpec((1, bn, bp), lambda t, i, k: (t, k, i)),
+                  pl.BlockSpec((1, bn, 1), lambda t, i, k: (t, k, 0))],
+        out_specs=pl.BlockSpec((1, bp, 1), lambda t, i, k: (t, i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, p, 1), B.dtype),
-        scratch_shapes=[pltpu.VMEM((p, 1), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bp, 1), jnp.float32)],
         interpret=interpret,
     )(Xs, r[..., None])
     return out[..., 0]

@@ -5,55 +5,160 @@ MXU-friendly shapes (interpret mode off-TPU so the same BlockSpecs
 execute everywhere), the jnp oracle on ragged shapes — and the oracle
 is bitwise the engine's historical inline einsum gradient, so routing
 never perturbs solver iterates.
+
+Block policy (DESIGN.md §12): `block` is None (budgeted default), an
+int sample tile bn, or an explicit (bn, bp) pair — bn tiles the sample
+axis, bp the feature axis. Anything else raises (the old dispatcher
+documented `block: int` but silently coerced tuples via `block[0]`, so
+a rank-style (bp, bn) pair picked the FEATURE tile as the sample
+tile). The feature axis no longer has a hard p cliff: the routing
+predicate is a per-tile VMEM budget — full-lane slabs while they fit,
+feature-tiled slabs past that, the oracle only when no legal tiling
+fits (ragged axes, sliver-degraded sample tiles, or p so large the
+gradient accumulator itself outgrows the budget).
 """
 from __future__ import annotations
 
-from repro.kernels.common import fit_block, is_ragged_samples, on_tpu
+from typing import Tuple
+
+from repro.kernels.common import (
+    MIN_TILE, aligned_fit_block, degrades_to_slivers, on_tpu,
+    validate_block,
+)
+from repro.kernels.common import is_ragged_samples  # re-export (tests/engine)
 from repro.kernels.logistic_grad.kernel import (
     logistic_grad_pallas, logistic_grad_unfused_pallas,
 )
 from repro.kernels.logistic_grad.ref import logistic_grad_ref
 
-# the kernel keeps the FULL feature axis resident per X slab (see
-# kernel.py); past this p the slab outgrows its VMEM budget, so the
-# dispatcher honours the documented "larger shapes belong to the
-# oracle" contract instead of failing Mosaic compilation
-MAX_FULL_LANE_P = 4096
+# per-dispatch VMEM budget for one grid step of the kernel (half of the
+# ~16 MB/core, leaving slack for operand double-buffering). With the
+# default bn = 128, full-lane slabs fit to p ~= 2.7k; past that the
+# kernel feature-tiles (the whole old MAX_FULL_LANE_P regime stays on
+# the kernel — tiled instead of falling off a cliff onto the oracle);
+# only p whose PADDED gradient accumulator alone busts the budget
+# (p ≳ 16k, see below) routes away entirely
+LOGISTIC_VMEM_BUDGET = 8 * 1024 * 1024
 
 
-def routes_to_oracle(n: int, p: int) -> bool:
-    """True when this (n, p) never reaches the pallas kernel — ragged,
-    or feature axis too large for a resident full-p slab. The engine's
-    block policy shares this so it never sweeps a shape the dispatcher
-    will not serve."""
-    return is_ragged_samples(n, p) or p > MAX_FULL_LANE_P
+def kernel_vmem_bytes(p: int, bn: int, bp: int) -> int:
+    """Estimated VMEM footprint of one fused-kernel grid step. The
+    (bn, bp) X slab is counted double-buffered at its true f32 size;
+    every trailing-singleton buffer — the gradient accumulator (p rows
+    total across its pi tiles), the z carry and y tile (bn rows), the
+    b and out tiles (bp rows) — is counted at its PADDED width: a
+    (r, 1) f32 buffer occupies full (8, 128) register tiles on TPU,
+    i.e. 512 bytes per row, not 4. Only the bn TILE of the sample axis
+    is resident, so n itself never enters."""
+    return 8 * bn * bp + 512 * (p + 2 * bn + 3 * bp)
 
 
-def logistic_grad(Xs, ys, B, *, block: int = 128,
+def _validate_block(block) -> Tuple[int | None, int | None]:
+    """Normalize `block` to a (bn_request, bp_request) pair, raising on
+    anything that is not None, an int, or a 2-tuple of positive ints.
+    A returned None request means "use the budgeted default for that
+    axis": block=None defaults both, a bare int is a bn request with
+    the feature tile budgeted (tuples must spell out both entries).
+    Note the tuple order: bn (sample axis) first, bp (feature axis)
+    second — a rank_update-style (bp, bn) pair would tile the wrong
+    axes, which is exactly the silent `block[0]` coercion this
+    validation replaces."""
+    if block is None:
+        return None, None
+    if isinstance(block, int) and not isinstance(block, bool):
+        (bn,) = validate_block(block, 1, "(bn,)")  # positivity check
+        return bn, None
+    return validate_block(block, 2, "(bn, bp)")
+
+
+def _budget_bp(p: int, bn: int) -> int:
+    """Largest aligned-divisor feature tile whose grid step fits the
+    VMEM budget — bp = p (the resident full-lane layout) whenever it
+    fits."""
+    bp = aligned_fit_block(p, min(p, max(LOGISTIC_VMEM_BUDGET // (8 * bn),
+                                         8)))
+    while kernel_vmem_bytes(p, bn, bp) > LOGISTIC_VMEM_BUDGET and bp > 8:
+        bp = aligned_fit_block(p, bp - 1)
+    return bp
+
+
+def resolve_logistic_blocks(n: int, p: int, block=None) -> Tuple[int, int]:
+    """Normalize a block policy to concrete (bn, bp) tile sizes.
+
+    `block` is None (bn = 128 request, bp budgeted), an int bn request,
+    or an explicit (bn, bp) pair — e.g. an autotuned winner from
+    `repro.kernels.autotune.autotune_logistic_block`. Each entry is
+    clipped to the largest 8-ALIGNED divisor of its dimension — the
+    tile the TPU grid can actually use, and the same notion of "legal"
+    the routing predicate judges by (a plain divisor scan can land on
+    alignment traps like 126 for size 504); a defaulted bp is the
+    largest such divisor whose slab fits `LOGISTIC_VMEM_BUDGET` (full
+    lanes for small p — the historical layout — feature tiles past it).
+    """
+    bn_req, bp_req = _validate_block(block)
+    bn = aligned_fit_block(n, 128 if bn_req is None else bn_req)
+    bp = _budget_bp(p, bn) if bp_req is None \
+        else aligned_fit_block(p, bp_req)
+    return bn, bp
+
+
+def _route_and_resolve(n: int, p: int, block) -> Tuple[bool, int, int]:
+    """ONE block resolution feeding both the routing verdict and the
+    dispatch tiles, so the predicate can never approve a tiling the
+    dispatcher then resolves differently. Routed when: ragged axes;
+    sample tiles degraded to slivers vs the request (e.g. n = 1016 =
+    8*127 against the 128 default); an explicitly requested feature
+    tile that degrades the same way; a budgeted default bp that itself
+    collapsed to a sliver (p past the full-lane budget with no mid-size
+    aligned divisor, e.g. p = 8168 = 8*1021 resolves to bp = 8); or a
+    resolved tiling still over the per-tile VMEM budget (only p so
+    large the gradient accumulator outgrows it, by construction)."""
+    bn_req, bp_req = _validate_block(block)
+    bn, bp = resolve_logistic_blocks(n, p, block)
+    routed = (
+        is_ragged_samples(n, p)
+        or degrades_to_slivers(n, 128 if bn_req is None else bn_req)
+        or (bp_req is not None and degrades_to_slivers(p, bp_req))
+        or (bp_req is None and bp < min(p, MIN_TILE))
+        or kernel_vmem_bytes(p, bn, bp) > LOGISTIC_VMEM_BUDGET)
+    return routed, bn, bp
+
+
+def routes_to_oracle(n: int, p: int, block=None) -> bool:
+    """True when this (n, p) never reaches the pallas kernel (see
+    `_route_and_resolve` for the clauses). The engine's block policy
+    shares this so it never sweeps a shape the dispatcher will not
+    serve."""
+    return _route_and_resolve(n, p, block)[0]
+
+
+def logistic_grad(Xs, ys, B, *, block=None,
                   interpret: bool | None = None):
     """All-tasks logistic gradient -X'(y sigmoid(-y Xb))/n.
 
-    Xs (m, n, p), ys (m, n) in {-1, +1}, B (m, p) -> (m, p). `block`
-    (an int `bn`, e.g. an autotuned winner from `repro.kernels.
-    autotune.autotune_logistic_block`) tiles the sample axis; ragged
-    and larger-than-VMEM-slab shapes fall back to `logistic_grad_ref`.
+    Xs (m, n, p), ys (m, n) in {-1, +1}, B (m, p) -> (m, p). `block` is
+    None, an int sample tile bn, or a (bn, bp) pair (e.g. an autotuned
+    winner from `repro.kernels.autotune.autotune_logistic_block`);
+    ragged, sliver-degraded, and over-VMEM-budget shapes fall back to
+    `logistic_grad_ref`.
     """
     m, n, p = Xs.shape
     interp = (not on_tpu()) if interpret is None else interpret
-    if routes_to_oracle(n, p):
+    routed, bn, bp = _route_and_resolve(n, p, block)
+    if routed:
         return logistic_grad_ref(Xs, ys, B)
-    bn = fit_block(n, block if isinstance(block, int) else block[0])
-    return logistic_grad_pallas(Xs, ys, B, bn=bn, interpret=interp)
+    return logistic_grad_pallas(Xs, ys, B, bn=bn, bp=bp, interpret=interp)
 
 
-def logistic_grad_unfused(Xs, ys, B, *, block: int = 128,
+def logistic_grad_unfused(Xs, ys, B, *, block=None,
                           interpret: bool | None = None):
     """Two-dispatch (matvec + back-projection) pallas baseline with the
     same routing policy — exists for the fused-vs-unfused benchmark pair
     and as a second kernel-path parity anchor in tests."""
     m, n, p = Xs.shape
     interp = (not on_tpu()) if interpret is None else interpret
-    if routes_to_oracle(n, p):
+    routed, bn, bp = _route_and_resolve(n, p, block)
+    if routed:
         return logistic_grad_ref(Xs, ys, B)
-    bn = fit_block(n, block if isinstance(block, int) else block[0])
-    return logistic_grad_unfused_pallas(Xs, ys, B, bn=bn, interpret=interp)
+    return logistic_grad_unfused_pallas(Xs, ys, B, bn=bn, bp=bp,
+                                        interpret=interp)

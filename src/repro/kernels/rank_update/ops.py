@@ -12,7 +12,10 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
-from repro.kernels.common import fit_block, is_ragged_samples, on_tpu
+from repro.kernels.common import (
+    aligned_fit_block, degrades_to_slivers, is_ragged_samples, on_tpu,
+    validate_block,
+)
 from repro.kernels.rank_update.kernel import (
     rank_update_pallas, rank_update_unfused_pallas,
 )
@@ -22,11 +25,23 @@ from repro.kernels.rank_update.ref import rank_update_ref
 def resolve_rank_blocks(n: int, p: int, block) -> Tuple[int, int]:
     """Normalize a block policy to concrete (bp, bn) tile sizes.
     `block` is one int (applied to both axes) or an explicit (bp, bn)
-    pair, e.g. an autotuned winner from `repro.kernels.autotune.
-    autotune_rank_block`; each entry is clipped to the largest divisor
-    of its dimension."""
-    bp, bn = block if isinstance(block, tuple) else (block, block)
-    return fit_block(p, bp), fit_block(n, bn)
+    pair — note the order, feature axis first — e.g. an autotuned
+    winner from `repro.kernels.autotune.autotune_rank_block`; anything
+    else raises instead of being silently coerced (the logistic
+    dispatcher's old `block[0]` bug, audited here too). Each entry is
+    clipped to the largest 8-aligned divisor of its dimension, the same
+    notion of "legal" the routing predicate judges by."""
+    bp, bn = validate_block(block, 2, "(bp, bn)")
+    return aligned_fit_block(p, bp), aligned_fit_block(n, bn)
+
+
+def rank_routes_to_oracle(n: int, p: int, block=128) -> bool:
+    """Routing predicate shared with the engine's rank block policy:
+    ragged shapes, and shapes whose requested tiles degrade to sliver
+    grids (e.g. n = 1016 against a 128 request), go to the jnp oracle."""
+    bp, bn = validate_block(block, 2, "(bp, bn)")
+    return (is_ragged_samples(n, p) or degrades_to_slivers(n, bn)
+            or degrades_to_slivers(p, bp))
 
 
 def rank_update(Xs, ys, weights=None, *, block=128,
@@ -42,12 +57,14 @@ def rank_update(Xs, ys, weights=None, *, block=128,
     the oracle. `block` is an int or an explicit (bp, bn) pair.
     """
     m, n, p = Xs.shape
+    # resolve (and so validate) blocks BEFORE the oracle short-circuit:
+    # a malformed block must raise on every path, not only on TPU
+    bp, bn = resolve_rank_blocks(n, p, block)
     if use_kernel is None:
         use_kernel = on_tpu()
     interp = (not on_tpu()) if interpret is None else interpret
-    if not use_kernel or is_ragged_samples(n, p):
+    if not use_kernel or rank_routes_to_oracle(n, p, block):
         return rank_update_ref(Xs, ys, weights)
-    bp, bn = resolve_rank_blocks(n, p, block)
     return rank_update_pallas(Xs, ys, weights, bp=bp, bn=bn,
                               interpret=interp)
 
@@ -59,9 +76,9 @@ def rank_update_unfused(Xs, ys, weights=None, *, block=128,
     same routing policy — exists for the fused-vs-unfused benchmark
     pair and as a second kernel-path parity anchor in tests."""
     m, n, p = Xs.shape
-    interp = (not on_tpu()) if interpret is None else interpret
-    if is_ragged_samples(n, p):
-        return rank_update_ref(Xs, ys, weights)
     bp, bn = resolve_rank_blocks(n, p, block)
+    interp = (not on_tpu()) if interpret is None else interpret
+    if rank_routes_to_oracle(n, p, block):
+        return rank_update_ref(Xs, ys, weights)
     return rank_update_unfused_pallas(Xs, ys, weights, bp=bp, bn=bn,
                                       interpret=interp)

@@ -371,6 +371,59 @@ def test_autotune_migrates_legacy_unnamespaced_cache(tmp_path, monkeypatch):
     assert disk == {"fista_step/cpu_m2_p32_r1_float32": [32, 1, 32]}
 
 
+def test_autotune_migrates_legacy_logistic_int_values(tmp_path, monkeypatch):
+    """ISSUE 5: pre-feature-tiling logistic winners were a bare int bn
+    with an implicit full-lane bp = p. Loads widen them through the
+    budgeted resolver ((n, p) read back off the key — full-lane here,
+    where it fits; clamped to a servable tiling where it would not),
+    rewrite the file once, and serve the migrated winner without
+    re-timing."""
+    import json
+    from repro.kernels import autotune
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    autotune.clear_memory_cache()
+    autotune.cache_path().parent.mkdir(parents=True, exist_ok=True)
+    autotune.cache_path().write_text(
+        json.dumps({"logistic_grad/cpu_m2_n32_p16_float32": 16}))
+    monkeypatch.setattr(
+        autotune, "_time_candidate",
+        lambda fn, reps: (_ for _ in ()).throw(
+            AssertionError("migrated key must be served, not re-timed")))
+    assert autotune.autotune_logistic_block(2, 32, 16, reps=1) == (16, 16)
+    disk = json.loads(autotune.cache_path().read_text())
+    assert disk == {"logistic_grad/cpu_m2_n32_p16_float32": [16, 16]}
+
+
+def test_autotune_logistic_never_sweeps_oracle_routed_shapes(tmp_path,
+                                                             monkeypatch):
+    """Shapes the dispatcher routes to the oracle return the budgeted
+    default untimed — the cache is never polluted with unservable keys.
+    Covers both routing clauses: sliver-degraded sample tiles
+    (n = 1016 = 8*127) and p past the VMEM budget entirely (the padded
+    gradient accumulator alone outgrows it around p ~ 16k)."""
+    from repro.kernels import autotune
+    from repro.kernels.logistic_grad.ops import (
+        resolve_logistic_blocks, routes_to_oracle,
+    )
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    autotune.clear_memory_cache()
+    monkeypatch.setattr(
+        autotune, "_time_candidate",
+        lambda fn, reps: (_ for _ in ()).throw(
+            AssertionError("oracle-routed shape must not sweep")))
+    n_sliver = 8 * 127                      # 1016: sliver-degraded
+    got = autotune.autotune_logistic_block(2, n_sliver, 64, reps=1)
+    assert got == resolve_logistic_blocks(n_sliver, 64)
+    p_huge = 20480                          # over-budget accumulator
+    assert routes_to_oracle(32, p_huge)
+    got_p = autotune.autotune_logistic_block(2, 32, p_huge, reps=1)
+    assert got_p == resolve_logistic_blocks(32, p_huge)
+    from repro.kernels.rank_update.ops import resolve_rank_blocks
+    got_rank = autotune.autotune_rank_block(2, n_sliver, 64, reps=1)
+    assert got_rank == resolve_rank_blocks(n_sliver, 64, 128)
+    assert not autotune.cache_path().exists()
+
+
 def test_explicit_block_bypasses_autotune(monkeypatch):
     from repro.kernels import autotune
     def boom(*a, **k):

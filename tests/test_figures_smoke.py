@@ -19,6 +19,7 @@ import json
 
 from benchmarks import fig1_regression as fig1
 from benchmarks import fig2_classification as fig2
+from benchmarks import largep_logistic as largep
 
 METHODS = {"lasso", "group_lasso", "refit_group_lasso", "icap",
            "dsml", "refit_dsml"}
@@ -76,3 +77,37 @@ def test_fig2_smoke_golden_metrics(tmp_path):
     assert 7.0 < pt["refit_dsml"]["est_err"] < 16.5
     assert pt["dsml"]["pred_err"] < pt["lasso"]["pred_err"]
     assert pt["refit_dsml"]["pred_err"] <= pt["dsml"]["pred_err"] + 0.02
+
+
+def test_largep_logistic_smoke_golden_metrics(tmp_path):
+    """ISSUE 5: the p = 8192 sweep point through the real driver — the
+    paper's p >> n regime past the old full-lane kernel cliff. Pins the
+    seed-0 recovery metrics (hamming 3, est 12.2) to ±50% bands AND the
+    routing contract: the shape stays on the feature-tiled kernel path
+    (routed_oracle False, bp < p) with kernel iterates matching the
+    oracle's to 1e-5."""
+    rows = largep.main(largep.SMOKE_P, out_dir=str(tmp_path), iters=100)
+    with open(tmp_path / "largep_logistic.json") as f:
+        results = json.load(f)
+    assert len(rows) == 1 and "kernel_dev=" in rows[0]
+    met = results["8192"]
+    assert not met["routed_oracle"]          # acceptance: on-kernel at 8192
+    assert met["bp"] < 8192 and 8192 % met["bp"] == 0   # genuinely tiled
+    assert met["kernel_dev"] <= 1e-5         # kernel path == oracle path
+    assert met["hamming"] <= 6               # golden 3
+    assert 6.0 < met["est_err"] < 18.3       # golden 12.2
+
+
+def test_stream_online_smoke_golden_metrics():
+    """Golden bands for the examples/stream_online.py headline metrics
+    (ROADMAP candidate): the --smoke demo through the real driver —
+    deterministic seed 0, so the refit cadence is pinned exactly and
+    the post-shift recovery metrics to ±50% bands around the committed
+    seed-0 values (final_hamming 2, final_est_err 0.985)."""
+    from examples.stream_online import main as stream_main
+    met = stream_main(["--smoke"])
+    assert met["generations"] == 5           # drift-adaptive cadence, exact
+    assert met["refits_during_stream"] == 4
+    assert met["final_hamming"] <= 4         # golden 2: support re-acquired
+    assert 0.49 < met["final_est_err"] < 1.48
+    assert 100 < met["samples_seen"] < 300   # decay-discounted effective n

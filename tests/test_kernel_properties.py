@@ -56,6 +56,40 @@ def test_logistic_grad_fused_matches_oracle(m, n, p, block, dtype, seed):
                                atol=_tol(dtype))
 
 
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 3), n=DIMS_8, p=st.sampled_from([64, 96, 128, 256]),
+       bn=BLOCKS, bp=st.sampled_from([8, 24, 32, 48, 100, 128]),
+       dtype=DTYPES, seed=st.integers(0, 3))
+def test_logistic_grad_feature_tiled_pairs_match_oracle(m, n, p, bn, bp,
+                                                        dtype, seed):
+    """ISSUE 5: explicit (bn, bp) pairs — non-divisor requests of both
+    axes included — must clip to legal tiles (or route to the oracle)
+    and match the oracle regardless; bp < p exercises the two-phase
+    feature-tiled sweep."""
+    Xs, ys, B = _logistic_case(m, n, p, dtype, seed)
+    out = logistic_grad(Xs, ys, B, block=(bn, bp), interpret=True)
+    ref = logistic_grad_ref(Xs, ys, B)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype))
+
+
+@settings(max_examples=12, deadline=None)
+@given(m=st.integers(1, 2), n=DIMS_8, p=st.sampled_from([96, 128, 192]),
+       bn=BLOCKS, bp=st.sampled_from([16, 24, 48, 100]),
+       seed=st.integers(0, 3))
+def test_logistic_grad_unfused_feature_tiled_matches_fused(m, n, p, bn,
+                                                           bp, seed):
+    """The two-dispatch twin shares the (bn, bp) clipping and the f32
+    accumulation order with the fused kernel."""
+    Xs, ys, B = _logistic_case(m, n, p, jnp.float32, seed)
+    fused = logistic_grad(Xs, ys, B, block=(bn, bp), interpret=True)
+    unfused = logistic_grad_unfused(Xs, ys, B, block=(bn, bp),
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               atol=1e-6)
+
+
 @settings(max_examples=10, deadline=None)
 @given(m=st.integers(1, 3), n=DIMS_ANY, p=DIMS_ANY,
        block=BLOCKS, seed=st.integers(0, 3))

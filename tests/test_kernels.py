@@ -108,6 +108,144 @@ def test_logistic_grad_ragged_falls_back_to_oracle():
                                   np.asarray(logistic_grad_ref(Xs, ys, B)))
 
 
+def _logistic_largep_case(m, n, p, seed=0, scale=0.02):
+    Xs = jax.random.normal(jax.random.PRNGKey(seed), (m, n, p))
+    ys = jnp.sign(jax.random.normal(jax.random.PRNGKey(seed + 1), (m, n)))
+    B = jax.random.normal(jax.random.PRNGKey(seed + 2), (m, p)) * scale
+    return Xs, ys, B
+
+
+def test_logistic_grad_p8192_executes_on_kernel_path():
+    """ISSUE 5 acceptance: p = 8192 (8-aligned n) is past the old
+    MAX_FULL_LANE_P cliff but must now run the feature-tiled pallas
+    kernel — the default policy picks a real feature tiling (bp < p)
+    and matches the oracle to 1e-5."""
+    from repro.kernels.logistic_grad.ops import (
+        resolve_logistic_blocks, routes_to_oracle,
+    )
+    m, n, p = 2, 128, 8192
+    assert not routes_to_oracle(n, p)
+    bn, bp = resolve_logistic_blocks(n, p)
+    assert bp < p and p % bp == 0           # genuinely feature-tiled
+    Xs, ys, B = _logistic_largep_case(m, n, p)
+    out = logistic_grad(Xs, ys, B, interpret=True)
+    ref = logistic_grad_ref(Xs, ys, B)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("block", [(64, 1024), (32, 2048), (48, 1024),
+                                   (100, 1500)])  # non-divisors included
+def test_logistic_grad_p8192_explicit_tilings(block):
+    m, n, p = 1, 192, 8192
+    Xs, ys, B = _logistic_largep_case(m, n, p, seed=3)
+    out = logistic_grad(Xs, ys, B, block=block, interpret=True)
+    ref = logistic_grad_ref(Xs, ys, B)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_logistic_grad_unfused_feature_tiled_matches_fused():
+    """The two-dispatch twin must tile features identically: same
+    (bn, bp), bitwise-equal f32 accumulation order."""
+    m, n, p = 2, 64, 8192
+    Xs, ys, B = _logistic_largep_case(m, n, p, seed=5)
+    fused = logistic_grad(Xs, ys, B, block=(32, 2048), interpret=True)
+    unfused = logistic_grad_unfused(Xs, ys, B, block=(32, 2048),
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("bad", [(16,), (8, 8, 8), "64", 12.5, (8.0, 8),
+                                 True, (True, 8), 0, -8, (8, 0), (8, -8)])
+def test_logistic_grad_block_validation_raises(bad):
+    """The old dispatcher documented `block: int` but silently accepted
+    any tuple via block[0]; malformed blocks must raise, never coerce."""
+    Xs, ys, B = _logistic_largep_case(1, 16, 16)
+    with pytest.raises(TypeError):
+        logistic_grad(Xs, ys, B, block=bad, interpret=True)
+
+
+def test_rank_and_ista_block_validation_raises():
+    from repro.kernels.ista_step.ops import resolve_blocks
+    Xs = jax.random.normal(KEY, (1, 16, 16))
+    ys = jnp.sign(jax.random.normal(KEY, (1, 16)))
+    with pytest.raises(TypeError):
+        rank_update(Xs, ys, block=(8, 8, 8), interpret=True,
+                    use_kernel=True)
+    # validation must fire on the oracle path too (use_kernel False is
+    # the CPU default) — a malformed block must never defer its crash
+    # to the first TPU run
+    with pytest.raises(TypeError):
+        rank_update(Xs, ys, block=(8, 8, 8), use_kernel=False)
+    with pytest.raises(TypeError):
+        resolve_blocks(16, 1, (8, 8))       # a rank-style pair
+    with pytest.raises(TypeError):
+        resolve_blocks(16, 1, "128")
+    # ragged shapes (which the oracle serves, ignoring blocks) and the
+    # engine's CPU/oracle policies still validate
+    from repro.kernels.ista_step.ops import ista_step_batched
+    S33 = jax.random.normal(KEY, (1, 33, 33))
+    b33 = jax.random.normal(KEY, (1, 33, 1))
+    with pytest.raises(TypeError):
+        ista_step_batched(S33, b33, b33, jnp.ones((1,)), 0.1, block=(8, 8))
+    from repro.core.engine import (
+        resolve_block_policy, resolve_logistic_block_policy,
+    )
+    with pytest.raises(TypeError):
+        resolve_block_policy(1, 16, 1, jnp.float32, (8, 8), False)
+    with pytest.raises(TypeError):
+        resolve_logistic_block_policy(1, 16, 16, jnp.float32, (8, 8, 8),
+                                      False)
+
+
+def test_ista_resolve_blocks_no_sliver_halving():
+    """The old local halving clip degraded non-divisor requests to
+    single-element tiles (48-on-80 -> 1); the aligned divisor scan
+    returns 40."""
+    from repro.kernels.ista_step.ops import resolve_blocks
+    assert resolve_blocks(80, 1, 48) == (40, 1, 40)
+    assert resolve_blocks(384, 8, 128) == (128, 8, 128)
+
+
+def test_sliver_shapes_route_to_oracle_bitwise():
+    """ISSUE 5 regression: n = 1016 = 8*127 has no aligned divisor near
+    the default 128 request (the divisor scan finds 127, which breaks
+    sublane alignment; the best aligned tile is a sliver of 8). Both
+    sample-streaming dispatchers must route it to the oracle instead of
+    quietly running a 127-step sliver grid."""
+    from repro.kernels.common import (
+        aligned_fit_block, degrades_to_slivers, fit_block,
+    )
+    from repro.kernels.logistic_grad.ops import routes_to_oracle
+    from repro.kernels.rank_update.ops import rank_routes_to_oracle
+    assert fit_block(1016, 128) == 127      # unaligned: a trap, not a tile
+    assert aligned_fit_block(1016, 128) == 8
+    assert degrades_to_slivers(1016, 128)
+    assert not degrades_to_slivers(80, 48)  # modest clip stays on-kernel
+    assert not degrades_to_slivers(1016, 8)  # explicit tiny request honoured
+    assert routes_to_oracle(1016, 64) and rank_routes_to_oracle(1016, 64)
+    # the budgeted DEFAULT bp can degrade too: p = 8168 = 8*1021 is past
+    # the full-lane budget but has no mid-size aligned divisor, so the
+    # default policy resolves bp = 8 — a sliver sweep that must route
+    # away just like an explicit sliver request would
+    from repro.kernels.logistic_grad.ops import resolve_logistic_blocks
+    assert resolve_logistic_blocks(128, 8168)[1] == 8
+    assert routes_to_oracle(128, 8168)
+    assert not routes_to_oracle(128, 8192)   # aligned divisors: on-kernel
+
+    m, n, p = 2, 1016, 64
+    Xs = jax.random.normal(KEY, (m, n, p))
+    ys = jnp.sign(jax.random.normal(jax.random.PRNGKey(1), (m, n)))
+    B = jax.random.normal(jax.random.PRNGKey(2), (m, p))
+    out = logistic_grad(Xs, ys, B, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(logistic_grad_ref(Xs, ys, B)))
+    S, c = rank_update(Xs, ys, interpret=True, use_kernel=True)
+    S_ref, c_ref = rank_update_ref(Xs, ys)
+    np.testing.assert_array_equal(np.asarray(S), np.asarray(S_ref))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c_ref))
+
+
 # ---------------------------------------------------------------------------
 # rank_update (fused rank-n sufficient-statistics update)
 # ---------------------------------------------------------------------------
