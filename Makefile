@@ -3,14 +3,24 @@ PY ?= python
 # benchmarks.paper_common)
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
-.PHONY: test test-stats test-cpu8 bench-smoke bench-json \
+.PHONY: test test-stats test-cpu8 lint bench-smoke bench-json \
 	check-regression bench-stream-smoke smoke-examples
 
-# default flow: the full pytest suite (which includes the statistical
-# tier below) plus the perf-floor gate on the committed bench JSON
-test:
+# default flow: the static-analysis pass first (fails in seconds, before
+# any kernel test runs), then the full pytest suite (which includes the
+# statistical tier below) plus the perf-floor gate on the committed
+# bench JSON
+test: lint
 	$(PY) -m pytest -q
 	$(PY) benchmarks/check_regression.py
+
+# repo-native invariant linter + static Pallas tiling/VMEM contract
+# checker (DESIGN.md section 13 for the RLxxx codes). The --cache leg
+# validates the committed autotune cache without importing jax; it is a
+# no-op when .cache/autotune.json does not exist.
+lint:
+	$(PY) -m tools.repro_lint src benchmarks
+	$(PY) -m tools.repro_lint --cache
 
 # statistical correctness tier alone: the paper's claims (exact support
 # recovery, debiased error vs the centralized oracle) plus the golden

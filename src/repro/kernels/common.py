@@ -44,22 +44,45 @@ def aligned_fit_block(size: int, block: int) -> int:
     return 8 * fit_block(size // 8, block // 8)
 
 
-def validate_block(block, arity: int, doc: str) -> tuple:
-    """Shared `block=`-argument validation for the kernel dispatchers:
-    an int broadcasts to all axes, a tuple must have exactly `arity`
-    int entries; anything else — bools, floats, wrong-arity tuples —
-    raises instead of being silently coerced (the historical `block[0]`
-    bug let a rank-style pair tile the wrong axes). Entries must be
-    POSITIVE — a zero block would divide-by-zero inside the divisor
-    scan and a negative one would silently reroute to the oracle. `doc`
-    names the expected tuple form in the error."""
+def validate_block(block, arity: int, doc: str, *,
+                   arities: tuple | None = None) -> tuple:
+    """Shared `block=`-argument validation for ALL kernel dispatchers:
+    anything that is not an accepted form — bools, floats, wrong-arity
+    tuples — raises instead of being silently coerced (the historical
+    `block[0]` bug let a rank-style pair tile the wrong axes). Entries
+    must be POSITIVE — a zero block would divide-by-zero inside the
+    divisor scan and a negative one would silently reroute to the
+    oracle. `doc` names the expected tuple form in the error.
+
+    Two acceptance modes, one definition site (so the lint tier has a
+    single pattern to check — see tools/repro_lint):
+
+    * `arities=None` (rank_update / ista_step / group / flash style):
+      an int broadcasts to all `arity` axes, a tuple must have exactly
+      `arity` entries.
+    * `arities=(0, 1, arity)`-style (logistic style, dispatchers with
+      budgeted per-axis defaults): 0 admits `block=None` (every axis
+      defaulted), 1 admits a bare int as a FIRST-axis request (the
+      remaining axes defaulted, NOT broadcast), `arity` admits the full
+      tuple. The returned length-`arity` tuple pads defaulted axes with
+      None for the resolver to budget.
+    """
     def ok(b):
         return isinstance(b, int) and not isinstance(b, bool) and b >= 1
-    if ok(block):
-        return (block,) * arity
-    if (isinstance(block, tuple) and len(block) == arity
-            and all(ok(b) for b in block)):
-        return block
+    if arities is None:
+        if ok(block):
+            return (block,) * arity
+        if (isinstance(block, tuple) and len(block) == arity
+                and all(ok(b) for b in block)):
+            return block
+    else:
+        if block is None and 0 in arities:
+            return (None,) * arity
+        if ok(block) and 1 in arities:
+            return (block,) + (None,) * (arity - 1)
+        if (isinstance(block, tuple) and len(block) == arity
+                and arity in arities and all(ok(b) for b in block)):
+            return block
     raise TypeError(
         f"block must be a positive int or a {doc} tuple of positive "
         f"ints — got {block!r}")

@@ -1,10 +1,45 @@
-"""Jit'd wrapper: standard (B, S, N, H) layout -> Pallas flash attention."""
+"""Dispatcher for the Pallas flash-attention kernel (serving path).
+
+Same convention as the other `kernels/*/ops.py` dispatchers: the pallas
+kernel on tile-able shapes (interpret mode off-TPU so the same
+BlockSpecs execute everywhere), the pure-jnp blockwise oracle
+(`ref.flash_attention_ref`, itself validated against dense softmax
+attention) on ragged or sliver-degraded sequence shapes — the seed-era
+wrapper had NO fallback and halved its tile requests unvalidated, so an
+odd sequence length quietly bottomed out at single-row tiles. `bq`/`bk`
+stay as the public tile knobs (call sites pin them); they are validated
+through `common.validate_block` and clipped with `aligned_fit_block`,
+the same notion of "legal tile" every other dispatcher judges by.
+"""
 from __future__ import annotations
 
-import jax
+from typing import Tuple
+
 import jax.numpy as jnp
 
+from repro.kernels.common import (
+    aligned_fit_block, degrades_to_slivers, on_tpu, validate_block,
+)
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def resolve_flash_blocks(S: int, T: int, block) -> Tuple[int, int]:
+    """Normalize a (bq, bk) request to concrete query/key tiles: each
+    entry clipped to the largest 8-ALIGNED divisor of its sequence axis
+    (the seed-era halving loop could land on 1-row tiles for odd
+    lengths instead of falling back)."""
+    bq, bk = validate_block(block, 2, "(bq, bk)")
+    return aligned_fit_block(S, bq), aligned_fit_block(T, bk)
+
+
+def flash_routes_to_oracle(S: int, T: int, block=(256, 256)) -> bool:
+    """Routing predicate: ragged sequence axes (S or T not 8-aligned)
+    and tiles that degrade to slivers against the request go to the jnp
+    oracle. Validates `block` on every path."""
+    bq, bk = validate_block(block, 2, "(bq, bk)")
+    return (bool(S % 8 or T % 8) or degrades_to_slivers(S, bq)
+            or degrades_to_slivers(T, bk))
 
 
 def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
@@ -14,19 +49,14 @@ def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
     B, S, N, H = q.shape
     T, K = k.shape[1], k.shape[2]
     G = N // K
-    interp = (jax.default_backend() != "tpu") if interpret is None \
-        else interpret
+    bq_, bk_ = resolve_flash_blocks(S, T, (bq, bk))
+    interp = (not on_tpu()) if interpret is None else interpret
+    if flash_routes_to_oracle(S, T, (bq, bk)):
+        return flash_attention_ref(q, k, v, causal=causal, window=window)
 
     qf = q.transpose(0, 2, 1, 3).reshape(B * N, S, H)
     kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * N, T, H)
     vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * N, T, H)
-
-    bq_ = bq
-    while S % bq_:
-        bq_ //= 2
-    bk_ = bk
-    while T % bk_:
-        bk_ //= 2
 
     out = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
                                  bq=bq_, bk=bk_, interpret=interp)

@@ -1,23 +1,50 @@
-"""Jit'd wrapper for the group-threshold kernel (master step of DSML)."""
+"""Dispatcher for the group hard-threshold kernel (master step of DSML).
+
+Same convention as the solver/sample-streaming kernels
+(`kernels/*/ops.py`): the pallas kernel on tile-able shapes (interpret
+mode off-TPU so the same BlockSpecs execute everywhere), the jnp oracle
+on ragged or sliver-degraded ones — the op is exact per row, so routing
+never perturbs the filtered matrix or the support indicator. `block=`
+is validated through `common.validate_block` (the seed-era wrapper
+halved a hard-coded 256 with no validation at all) and clipped with
+`aligned_fit_block`, the same notion of "legal tile" every other
+dispatcher judges by.
+"""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
+from repro.kernels.common import (
+    aligned_fit_block, degrades_to_slivers, on_tpu, validate_block,
+)
 from repro.kernels.group_threshold.kernel import group_threshold_pallas
 from repro.kernels.group_threshold.ref import group_threshold_ref
 
 
-def group_threshold(B, Lam, *, interpret: bool | None = None):
-    """B: (p, m) -> (filtered (p, m), keep (p,) bool)."""
+def resolve_group_block(p: int, block=None) -> int:
+    """Normalize a block policy to a concrete row-tile size bp. `block`
+    is None (the historical 256 request) or an int bp request, clipped
+    to the largest 8-ALIGNED divisor of p (the sublane axis of the
+    (bp, m) tile — m tasks ride the lane axis whole)."""
+    (bp,) = validate_block(256 if block is None else block, 1, "(bp,)")
+    return aligned_fit_block(p, bp)
+
+
+def group_routes_to_oracle(p: int, block=None) -> bool:
+    """Routing predicate: ragged row counts (p % 8) and row tiles that
+    degrade to slivers against the request (e.g. p = 1016 = 8*127, where
+    the seed-era halving loop quietly ran an 8-row sliver sweep) take
+    the jnp oracle. Validates `block` on every path."""
+    (bp_req,) = validate_block(256 if block is None else block, 1, "(bp,)")
+    return bool(p % 8) or degrades_to_slivers(p, bp_req)
+
+
+def group_threshold(B, Lam, *, block=None, interpret: bool | None = None):
+    """Row-wise group hard threshold. B: (p, m) -> (filtered (p, m),
+    keep (p,) bool). `block` is None or an int row tile bp."""
     p, m = B.shape
-    interp = (jax.default_backend() != "tpu") if interpret is None \
-        else interpret
-    if p % 8:
+    bp = resolve_group_block(p, block)
+    interp = (not on_tpu()) if interpret is None else interpret
+    if group_routes_to_oracle(p, block):
         out, keep = group_threshold_ref(B, Lam)
         return out, keep
-    bp = 256
-    while p % bp:
-        bp //= 2
     out, keep = group_threshold_pallas(B, Lam, bp=bp, interpret=interp)
     return out, keep[:, 0].astype(bool)

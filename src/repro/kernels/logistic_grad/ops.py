@@ -53,22 +53,15 @@ def kernel_vmem_bytes(p: int, bn: int, bp: int) -> int:
     return 8 * bn * bp + 512 * (p + 2 * bn + 3 * bp)
 
 
-def _validate_block(block) -> Tuple[int | None, int | None]:
-    """Normalize `block` to a (bn_request, bp_request) pair, raising on
-    anything that is not None, an int, or a 2-tuple of positive ints.
-    A returned None request means "use the budgeted default for that
-    axis": block=None defaults both, a bare int is a bn request with
-    the feature tile budgeted (tuples must spell out both entries).
-    Note the tuple order: bn (sample axis) first, bp (feature axis)
-    second — a rank_update-style (bp, bn) pair would tile the wrong
-    axes, which is exactly the silent `block[0]` coercion this
-    validation replaces."""
-    if block is None:
-        return None, None
-    if isinstance(block, int) and not isinstance(block, bool):
-        (bn,) = validate_block(block, 1, "(bn,)")  # positivity check
-        return bn, None
-    return validate_block(block, 2, "(bn, bp)")
+# `block=` normalization: the shared validator's partial-arity mode.
+# block=None defaults both axes, a bare int is a bn request with the
+# feature tile budgeted (NOT broadcast — tuples must spell out both
+# entries), a (bn, bp) pair is taken whole; a returned None request
+# means "use the budgeted default for that axis". Note the tuple
+# order: bn (sample axis) first, bp (feature axis) second — a
+# rank_update-style (bp, bn) pair would tile the wrong axes, which is
+# exactly the silent `block[0]` coercion this validation replaces.
+_BLOCK_ARITIES = (0, 1, 2)
 
 
 def _budget_bp(p: int, bn: int) -> int:
@@ -95,7 +88,8 @@ def resolve_logistic_blocks(n: int, p: int, block=None) -> Tuple[int, int]:
     largest such divisor whose slab fits `LOGISTIC_VMEM_BUDGET` (full
     lanes for small p — the historical layout — feature tiles past it).
     """
-    bn_req, bp_req = _validate_block(block)
+    bn_req, bp_req = validate_block(block, 2, "(bn, bp)",
+                                    arities=_BLOCK_ARITIES)
     bn = aligned_fit_block(n, 128 if bn_req is None else bn_req)
     bp = _budget_bp(p, bn) if bp_req is None \
         else aligned_fit_block(p, bp_req)
@@ -113,7 +107,8 @@ def _route_and_resolve(n: int, p: int, block) -> Tuple[bool, int, int]:
     aligned divisor, e.g. p = 8168 = 8*1021 resolves to bp = 8); or a
     resolved tiling still over the per-tile VMEM budget (only p so
     large the gradient accumulator outgrows it, by construction)."""
-    bn_req, bp_req = _validate_block(block)
+    bn_req, bp_req = validate_block(block, 2, "(bn, bp)",
+                                    arities=_BLOCK_ARITIES)
     bn, bp = resolve_logistic_blocks(n, p, block)
     routed = (
         is_ragged_samples(n, p)

@@ -22,6 +22,25 @@ from repro.kernels.rank_update.kernel import (
 from repro.kernels.rank_update.ref import rank_update_ref
 
 
+# per-dispatch VMEM budget for one grid step, same 8 MB envelope as the
+# logistic kernel (half the ~16 MB core, slack for double-buffering)
+RANK_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def rank_vmem_bytes(bp: int, bn: int) -> int:
+    """Estimated VMEM footprint of one fused-kernel grid step: the two
+    (bn, bp) X slabs (xi, xj) double-buffered at their true f32 size
+    with the lane axis padded to full 128-lane register tiles, the
+    (bp, bp) Sigma output tile, and the trailing-singleton y/c buffers
+    at their PADDED 512 B/row width (a (r, 1) f32 buffer occupies full
+    (8, 128) register tiles on TPU). The byte model is the checked
+    contract shared with tools/repro_lint's static tiling pass — an
+    explicit `block=` the model rejects routes to the bitwise oracle
+    instead of compiling a Mosaic OOM."""
+    lanes = ((bp + 127) // 128) * 128
+    return 16 * bn * lanes + 4 * bp * lanes + 512 * (bn + bp)
+
+
 def resolve_rank_blocks(n: int, p: int, block) -> Tuple[int, int]:
     """Normalize a block policy to concrete (bp, bn) tile sizes.
     `block` is one int (applied to both axes) or an explicit (bp, bn)
@@ -37,11 +56,16 @@ def resolve_rank_blocks(n: int, p: int, block) -> Tuple[int, int]:
 
 def rank_routes_to_oracle(n: int, p: int, block=128) -> bool:
     """Routing predicate shared with the engine's rank block policy:
-    ragged shapes, and shapes whose requested tiles degrade to sliver
-    grids (e.g. n = 1016 against a 128 request), go to the jnp oracle."""
-    bp, bn = validate_block(block, 2, "(bp, bn)")
-    return (is_ragged_samples(n, p) or degrades_to_slivers(n, bn)
-            or degrades_to_slivers(p, bp))
+    ragged shapes, shapes whose requested tiles degrade to sliver grids
+    (e.g. n = 1016 against a 128 request), and resolved tilings whose
+    grid step busts `RANK_VMEM_BUDGET` (an explicit block= large enough
+    that the X slabs or the Sigma tile outgrow VMEM) go to the jnp
+    oracle."""
+    bp_req, bn_req = validate_block(block, 2, "(bp, bn)")
+    bp, bn = resolve_rank_blocks(n, p, block)
+    return (is_ragged_samples(n, p) or degrades_to_slivers(n, bn_req)
+            or degrades_to_slivers(p, bp_req)
+            or rank_vmem_bytes(bp, bn) > RANK_VMEM_BUDGET)
 
 
 def rank_update(Xs, ys, weights=None, *, block=128,

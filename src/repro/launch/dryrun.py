@@ -17,6 +17,7 @@ from repro.configs import ASSIGNED  # noqa: E402
 from repro.launch.hlo import analyze_hlo, roofline  # noqa: E402
 from repro.launch.mesh import HW, make_production_mesh  # noqa: E402
 from repro.launch.specs import SHAPES, input_specs  # noqa: E402
+from repro.substrate import make_mesh  # noqa: E402
 from repro.models import stack_plan  # noqa: E402
 from repro.serving.engine import make_prefill_step, make_serve_step  # noqa: E402
 from repro.sharding.rules import (  # noqa: E402
@@ -42,7 +43,7 @@ def lower_combo(arch: str, shape: str, *, multi_pod: bool,
     cfg, mode = spec.cfg, spec.mode
     info = SHAPES[shape]
     if mesh_override:
-        mesh = jax.make_mesh(tuple(mesh_override), ("data", "model"))
+        mesh = make_mesh(tuple(mesh_override), ("data", "model"))
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     B, S = info["batch"], info["seq"]
@@ -112,6 +113,8 @@ def lower_combo(arch: str, shape: str, *, multi_pod: bool,
     t_compile = time.time() - t0
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # jax<=0.4.x: one dict per computation
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     bytes_acc = float(ca.get("bytes accessed", 0.0))
     ma = compiled.memory_analysis()

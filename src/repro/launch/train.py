@@ -23,6 +23,7 @@ from repro.checkpoint.io import restore_pytree, save_pytree
 from repro.configs import ASSIGNED, get_config, smoke
 from repro.data.synth_tokens import synthetic_lm_batches
 from repro.launch.mesh import make_host_mesh
+from repro.substrate import use_mesh
 from repro.sharding.rules import (
     batch_pspecs, logits_pspec, named, opt_pspecs, train_state_pspecs,
 )
@@ -72,7 +73,7 @@ def main():
                                    batch=args.batch, seq=args.seq,
                                    frontend_shape=fe_shape)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         for i, batch in zip(range(args.steps), batches):
             state, metrics = step(state, batch)
             if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:

@@ -1,0 +1,17 @@
+"""Known-bad fixture: RL105 — un-namespaced autotune cache writes.
+
+The pre-PR-4 regression class: a bare `"tpu_m8_..."` key collides
+across kernels once two sweeps share `.cache/autotune.json`.
+"""
+_memory_cache: dict = {}
+disk: dict = {}
+
+
+def remember(backend: str, best):
+    _memory_cache[f"{backend}_m8_p128_float32"] = best   # RL105: no '<kernel>/'
+    disk["tpu_m8_p128_float32"] = best                   # RL105
+
+
+def remember_good(best):
+    # namespaced writes are fine — must NOT fire
+    _memory_cache["fista_step/tpu_m8_p128_r4_float32"] = best

@@ -1,0 +1,8 @@
+"""Known-bad fixture: RL106 — mutating global jax config outside the
+allowlist. Library code must not flip process-global precision or x64
+state under the caller's feet."""
+import jax
+
+
+def enable_x64():
+    jax.config.update("jax_enable_x64", True)  # RL106

@@ -1,0 +1,14 @@
+"""Known-bad fixture: RL101 — sharding plumbing outside substrate/.
+
+This file is NOT importable production code; it exists so
+tests/test_invariants.py can assert the linter fires on each
+violation class. Kept syntactically valid but never executed.
+"""
+from jax.experimental.shard_map import shard_map  # RL101
+import jax
+
+
+def build(mesh, f):
+    mesh = jax.make_mesh((2,), ("tasks",))        # RL101
+    jax.lax.psum(1.0, "tasks")                    # RL101
+    return shard_map(f, mesh=mesh)

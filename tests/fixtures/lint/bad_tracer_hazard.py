@@ -1,0 +1,12 @@
+"""Known-bad fixture: RL107 — Python control flow / scalarization on
+traced values inside a jit-reachable function."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(x):
+    g = jnp.sum(x)
+    if g > 0:          # RL107: Python `if` on a traced value
+        x = x - 1.0
+    return float(g)    # RL107: float() on a traced value

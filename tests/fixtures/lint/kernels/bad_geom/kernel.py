@@ -1,0 +1,19 @@
+"""Known-bad fixture: RL201/RL202 — BlockSpec geometry that disagrees
+with its own grid, and a tile parameter with no divisibility guard."""
+import jax.experimental.pallas as pl
+
+
+def _body(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def bad_geom_pallas(x, n, p, bn, bp):
+    # no `assert n % bn == 0` anywhere in this module -> RL202 on bn/bp
+    x_spec = pl.BlockSpec((bn, bp), lambda i: (i, 0))  # RL201: arity 1 vs grid 2
+    o_spec = pl.BlockSpec((bn, bp), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _body,
+        grid=(n // bn, p // bp),
+        in_specs=[x_spec],
+        out_specs=o_spec,
+    )(x)

@@ -1,0 +1,18 @@
+"""Known-bad fixture: RL102/RL103/RL104 — a `kernels/*/ops.py` that
+imports pallas directly (dispatchers must not), and whose public entry
+reaches the pallas path without `validate_block` or a routing
+predicate."""
+import jax.experimental.pallas as pl  # RL102: pallas import outside kernel.py
+import jax.numpy as jnp
+
+
+def _bad_pallas(x, bn):
+    # stand-in for a kernel launch; the name suffix is what the
+    # dispatcher-convention check keys on
+    return pl.pallas_call(lambda ref, o: None, grid=(1,))(x)
+
+
+def bad_op(x, block=128):
+    # RL103: never calls common.validate_block
+    # RL104: never consults a routes_to_oracle / is_ragged predicate
+    return _bad_pallas(jnp.asarray(x), block)

@@ -1,0 +1,170 @@
+"""Tier-1 self-hosting gate for the repro static-analysis pass.
+
+Two halves:
+
+* **Self-hosting** — run both engines over `src/` and `benchmarks/`
+  exactly as `make lint` does and require zero findings. Any new
+  violation of a standing invariant (DESIGN.md section 13) fails the
+  suite, not just the standalone lint target.
+* **Fixtures** — each known-bad file under `tests/fixtures/lint/`
+  encodes one violation class; the linter must report the specific
+  finding code (not merely "some finding") and must not drown it in
+  false positives on the surrounding lines.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from tools.repro_lint import run
+from tools.repro_lint.cachecheck import check_cache_file
+from tools.repro_lint.contracts import check_kernel_geometry
+from tools.repro_lint.findings import CODES
+from tools.repro_lint.invariants import lint_file
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "lint"
+
+
+def codes(findings):
+    return sorted({f.code for f in findings})
+
+
+# --- self-hosting ---------------------------------------------------------
+
+def test_repo_is_lint_clean():
+    findings = run([str(REPO / "src"), str(REPO / "benchmarks")])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_cli_exit_codes():
+    # the same contract `make lint` relies on: 0 clean, 1 on findings
+    env_paths = [str(REPO / "src")]
+    clean = subprocess.run(
+        [sys.executable, "-m", "tools.repro_lint", "--no-contracts",
+         *env_paths],
+        cwd=REPO, capture_output=True, text=True)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    dirty = subprocess.run(
+        [sys.executable, "-m", "tools.repro_lint", "--no-contracts",
+         str(FIXTURES / "bad_import_boundary.py")],
+        cwd=REPO, capture_output=True, text=True)
+    assert dirty.returncode == 1
+    assert "RL101" in dirty.stdout
+
+
+def test_cache_cli_never_imports_jax():
+    probe = ("import sys, tools.repro_lint.cachecheck as c; "
+             "sys.exit(1 if 'jax' in sys.modules else 0)")
+    r = subprocess.run([sys.executable, "-c", probe],
+                       cwd=REPO, capture_output=True, text=True)
+    assert r.returncode == 0, "cachecheck must stay jax-free"
+
+
+def test_every_code_documented():
+    assert all(code.startswith("RL") for code in CODES)
+    for findings_source in ("RL101", "RL105", "RL107", "RL201",
+                            "RL210", "RL212", "RL301", "RL303"):
+        assert findings_source in CODES
+
+
+# --- Engine 1 fixtures ----------------------------------------------------
+
+def test_fixture_import_boundary():
+    f = lint_file(FIXTURES / "bad_import_boundary.py")
+    assert codes(f) == ["RL101"]
+    assert len(f) == 3          # shard_map import, make_mesh, lax.psum
+
+
+def test_fixture_ops_convention():
+    f = lint_file(FIXTURES / "kernels" / "bad_ops" / "ops.py")
+    assert codes(f) == ["RL102", "RL103", "RL104"]
+
+
+def test_fixture_autotune_key():
+    f = lint_file(FIXTURES / "bad_autotune_key.py")
+    assert codes(f) == ["RL105"]
+    assert len(f) == 2          # the namespaced write must NOT fire
+
+
+def test_fixture_config_mutation():
+    f = lint_file(FIXTURES / "bad_config_mutation.py")
+    assert codes(f) == ["RL106"]
+
+
+def test_fixture_tracer_hazard():
+    f = lint_file(FIXTURES / "bad_tracer_hazard.py")
+    assert codes(f) == ["RL107"]
+    assert len(f) == 2          # `if g > 0` and `float(g)`
+
+
+# --- Engine 2 geometry fixture -------------------------------------------
+
+def test_fixture_blockspec_geometry():
+    path = FIXTURES / "kernels" / "bad_geom" / "kernel.py"
+    f = check_kernel_geometry(path, str(path))
+    assert "RL201" in codes(f)
+    assert "RL202" in codes(f)
+    # RL202 must name the unguarded tile params, not the array dims only
+    tile_msgs = [x.message for x in f if x.code == "RL202"]
+    assert any("'bn'" in m or "'bp'" in m for m in tile_msgs)
+
+
+# --- cache checker fixtures ----------------------------------------------
+
+def test_fixture_bad_cache_json():
+    f = check_cache_file(FIXTURES / "bad_cache.json")
+    got = codes(f)
+    assert got == ["RL301", "RL302", "RL303"]
+    by_code = {}
+    for x in f:
+        by_code.setdefault(x.code, []).append(x.message)
+    assert len(by_code["RL301"]) == 1          # the bare key
+    assert len(by_code["RL302"]) == 2          # unknown ns + wrong dims
+    assert len(by_code["RL303"]) == 1          # wrong value arity
+    # legacy int value is legal for fista_step only — no finding for it
+    assert not any("fista_step" in m for m in by_code["RL303"])
+
+
+def test_missing_cache_file_is_clean(tmp_path):
+    assert check_cache_file(tmp_path / "nope.json") == []
+
+
+def test_committed_cache_if_any_is_clean():
+    cache = REPO / ".cache" / "autotune.json"
+    findings = check_cache_file(cache)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_malformed_cache_root(tmp_path):
+    bad = tmp_path / "autotune.json"
+    bad.write_text(json.dumps([1, 2, 3]))
+    assert codes(check_cache_file(bad)) == ["RL302"]
+
+
+# --- contract grid sanity -------------------------------------------------
+
+def test_contract_grid_runs_clean():
+    # Engine 2's dispatch-contract pass over the real kernels package;
+    # geometry is exercised by test_repo_is_lint_clean too, but this
+    # pins the jax-importing half in isolation for faster bisection.
+    from tools.repro_lint.contracts import check_contracts
+    findings = check_contracts([str(REPO / "src")])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_budget_model_rejects_known_bust():
+    # the static byte model itself must keep rejecting the PR-5
+    # regression point: p=8168 with full-lane bp busts 8 MB
+    from repro.kernels.logistic_grad.ops import (
+        LOGISTIC_VMEM_BUDGET, kernel_vmem_bytes)
+    assert kernel_vmem_bytes(8168, 1024, 8168) > LOGISTIC_VMEM_BUDGET
+    assert kernel_vmem_bytes(128, 128, 128) <= LOGISTIC_VMEM_BUDGET
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-v"]))

@@ -1,0 +1,35 @@
+"""repro_lint: the repo-native static-analysis pass.
+
+Two engines plus a cache validator, all runnable via
+`python -m tools.repro_lint` (see `__main__.py`):
+
+* Engine 1 (`invariants.py`) — AST lints enforcing ROADMAP.md's
+  standing invariants (RL1xx). Pure stdlib, never imports jax.
+* Engine 2 (`contracts.py`) — static Pallas tiling/VMEM contract
+  checks (RL2xx): AST BlockSpec geometry plus the dispatchers' own
+  byte models and routing predicates evaluated over an adversarial
+  shape×block grid. Imports the repro package (and so jax), executes
+  no kernel, needs no TPU.
+* `--cache` (`cachecheck.py`) — committed autotune-cache key/value
+  shape validation (RL3xx). Pure stdlib.
+
+The pass is self-hosting: `tests/test_invariants.py` runs it over
+`src/` and `benchmarks/` inside tier-1, so any new violation fails the
+suite; `make lint` runs the same pass standalone.
+"""
+from tools.repro_lint.cachecheck import check_cache_file
+from tools.repro_lint.findings import CODES, Finding
+from tools.repro_lint.invariants import lint_file, lint_paths
+
+__all__ = ["CODES", "Finding", "check_cache_file", "lint_file",
+           "lint_paths", "run"]
+
+
+def run(paths, *, contracts: bool = True):
+    """Full lint: Engine 1 over `paths`, plus Engine 2 when
+    `contracts` (imports jax transitively). Returns sorted findings."""
+    findings = lint_paths(paths)
+    if contracts:
+        from tools.repro_lint.contracts import check_contracts
+        findings.extend(check_contracts(paths))
+    return sorted(findings)

@@ -1,0 +1,60 @@
+"""CLI for the repro static-analysis pass.
+
+    python -m tools.repro_lint src benchmarks      # both engines
+    python -m tools.repro_lint --no-contracts src  # Engine 1 only (no jax)
+    python -m tools.repro_lint --cache             # cache file only (no jax)
+    python -m tools.repro_lint --cache .cache/autotune.json
+
+Exit status: 0 when clean, 1 when any finding fires, 2 on usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description="repo-native invariant linter + static Pallas "
+                    "tiling/VMEM contract checker")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to lint (e.g. src benchmarks)")
+    ap.add_argument("--cache", nargs="?", const=".cache/autotune.json",
+                    default=None, metavar="FILE",
+                    help="validate an autotune cache file (default "
+                         ".cache/autotune.json) and nothing else; never "
+                         "imports jax")
+    ap.add_argument("--no-contracts", action="store_true",
+                    help="skip Engine 2 (the jax-importing dispatch-"
+                         "contract grid); Engine 1 AST lints only")
+    args = ap.parse_args(argv)
+
+    if args.cache is not None:
+        from tools.repro_lint.cachecheck import check_cache_file
+        findings = check_cache_file(args.cache)
+        label = f"cache check over {args.cache}"
+    else:
+        if not args.paths:
+            ap.error("give paths to lint, or --cache")
+        from tools.repro_lint import run
+        findings = run(args.paths, contracts=not args.no_contracts)
+        label = f"lint over {' '.join(args.paths)}"
+
+    for f in findings:
+        print(f.render())
+    if findings:
+        by_code: dict = {}
+        for f in findings:
+            by_code[f.code] = by_code.get(f.code, 0) + 1
+        summary = ", ".join(f"{c} x{n}" for c, n in sorted(by_code.items()))
+        print(f"repro_lint: {len(findings)} finding(s) [{summary}] "
+              f"({label})", file=sys.stderr)
+        return 1
+    print(f"repro_lint: clean ({label})", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,54 @@
+"""Finding record + the registry of machine-checked invariant codes.
+
+Every standing invariant in ROADMAP.md that the linter enforces has a
+stable code here; DESIGN.md §13 documents each one with its rationale.
+Codes are grouped by engine: RL1xx are AST invariant lints (pure
+stdlib, no jax import), RL2xx are static tiling/VMEM contract checks
+(import the dispatchers' own byte models and predicates, execute
+nothing), RL3xx validate a committed autotune cache file (pure JSON,
+no jax).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+CODES = {
+    # Engine 1 — AST invariant lints (invariants.py)
+    "RL101": "shard_map/mesh/collective plumbing imported outside "
+             "src/repro/substrate/",
+    "RL102": "pallas/pltpu imported outside kernels/*/kernel.py",
+    "RL103": "kernel dispatcher entry reaches a pallas call without "
+             "common.validate_block",
+    "RL104": "kernel dispatcher entry reaches a pallas call without a "
+             "routes_to_oracle-family predicate",
+    "RL105": "autotune cache written under a bare (un-namespaced) key",
+    "RL106": "jax.config mutated outside the approved allowlist",
+    "RL107": "tracer hazard: Python cast/branch on a traced value in "
+             "jit-reachable code",
+    # Engine 2 — static tiling/VMEM contract checks (contracts.py)
+    "RL201": "BlockSpec index_map arity disagrees with its pallas_call grid",
+    "RL202": "BlockSpec tile parameter lacks a divisibility assert in its "
+             "kernel wrapper module",
+    "RL210": "dispatchable configuration busts the kernel's VMEM budget",
+    "RL211": "dispatchable configuration resolves a non-divisor or "
+             "misaligned tile",
+    "RL212": "routing predicate disagrees with the resolver it gates",
+    "RL213": "autotune candidate the dispatcher would refuse to serve",
+    # --cache mode (cachecheck.py)
+    "RL301": "autotune cache key is not namespaced '<kernel>/...'",
+    "RL302": "autotune cache key has an unknown namespace or malformed "
+             "dimension spec",
+    "RL303": "autotune cache value has the wrong shape for its kernel",
+}
