@@ -4,7 +4,7 @@ PY ?= python
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
 .PHONY: test test-stats test-cpu8 lint bench-smoke bench-json \
-	check-regression bench-stream-smoke smoke-examples
+	check-regression bench-stream-smoke smoke-examples obs-report
 
 # default flow: the static-analysis pass first (fails in seconds, before
 # any kernel test runs), then the full pytest suite (which includes the
@@ -63,3 +63,12 @@ smoke-examples:
 	$(PY) examples/stream_online.py --smoke
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	$(PY) examples/quickstart.py
+
+# telemetry quick look: run the streaming bench instrumented, then
+# summarize the snapshot it wrote (experiments/obs/stream_smoke.json;
+# a .trace.json Chrome trace lands next to it — open in Perfetto)
+obs-report:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	$(PY) benchmarks/stream_bench.py --smoke \
+	    --obs-out experiments/obs/stream_smoke.json
+	$(PY) -m repro.obs experiments/obs/stream_smoke.json

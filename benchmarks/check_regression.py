@@ -47,10 +47,68 @@ FLOORS = (
 )
 
 
-def _speedups(path: str) -> dict:
+def _rows(path: str) -> list:
+    """Benchmark rows from either artifact format: the PR-7+
+    `{"meta": ..., "rows": [...]}` object or the older flat list."""
     with open(path) as f:
-        rows = json.load(f)
-    return {r["name"]: r["speedup"] for r in rows if "speedup" in r}
+        data = json.load(f)
+    return data["rows"] if isinstance(data, dict) else data
+
+
+def _speedups(path: str) -> dict:
+    return {r["name"]: r["speedup"] for r in _rows(path)
+            if "speedup" in r}
+
+
+# calls a single instrumented dispatch makes with telemetry disabled:
+# a generous ceiling over any real code path (the logistic solve makes
+# one record_route per compilation plus one engine record per call)
+OBS_CALLS_PER_DISPATCH = 16
+
+
+def check_obs_overhead(current: str, budget: float = 0.02) -> list:
+    """Guard the REPRO_OBS=0 path: time disabled-mode no-op telemetry
+    calls and require `OBS_CALLS_PER_DISPATCH` of them to cost under
+    `budget` (2%) of every tracked kernel pair's per-call time. Keeps
+    instrumentation honest — the disabled registry must stay a single
+    attribute check, never grow a lock acquisition or dict lookup."""
+    import time
+    try:
+        from repro.obs.registry import Registry
+    except ImportError:
+        print("skip obs_overhead: repro.obs not importable "
+              "(run with PYTHONPATH=src)")
+        return []
+    reg = Registry(enabled=False)
+    N = 200_000
+    t0 = time.perf_counter()
+    for _ in range(N):
+        reg.inc("overhead.probe", kernel="x", outcome="y")
+    t_inc = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(N):
+        with reg.span("overhead.probe", kernel="x"):
+            pass
+    t_span = time.perf_counter() - t0
+    per_call_us = max(t_inc, t_span) / N * 1e6
+    overhead_us = OBS_CALLS_PER_DISPATCH * per_call_us
+    failures = []
+    by_name = {r["name"]: r for r in _rows(current)}
+    for name, _ in FLOORS:
+        row = by_name.get(name)
+        if row is None or not row.get("us"):
+            continue
+        frac = overhead_us / row["us"]
+        if frac > budget:
+            failures.append(
+                f"obs_overhead {name}: {overhead_us:.2f}us disabled-mode "
+                f"telemetry is {frac:.1%} of {row['us']:.0f}us "
+                f"(> {budget:.0%})")
+    if not failures:
+        print(f"ok obs_overhead: {OBS_CALLS_PER_DISPATCH} disabled calls "
+              f"= {overhead_us:.2f}us (< {budget:.0%} of every tracked "
+              f"pair)")
+    return failures
 
 
 def main() -> int:
@@ -80,6 +138,8 @@ def main() -> int:
                     failures.append(
                         f"{name}: {cur[name]:.2f}x is {ratio:.2f} of "
                         f"baseline {base[name]:.2f}x (< {args.max_drop})")
+
+    failures.extend(check_obs_overhead(args.current))
 
     for f in failures:
         print(f"REGRESSION {f}", file=sys.stderr)

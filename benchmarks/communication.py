@@ -8,6 +8,12 @@
 Bytes are measured from the actual arrays the implementation ships, and
 the DSML one-round property is verified structurally: the SPMD HLO of
 `dsml_fit_sharded` contains exactly ONE all-gather collective.
+
+Since PR 7 the streaming-ingest column is MEASURED, not modeled: the
+`repro.obs` collective counters (fed by every `substrate/collectives`
+helper at trace time — local-shard nbytes × mesh participants) are read
+back from an 8-device probe subprocess, and cross-checked against the
+arithmetic model so the two can never silently diverge.
 """
 from __future__ import annotations
 
@@ -63,13 +69,82 @@ def verify_one_round() -> dict:
     }
 
 
+# Traces ONE sharded streaming ingest on an 8-device (data=4 x task=2)
+# mesh and dumps the obs collective counters the substrate helpers
+# recorded while tracing — the measured byte ledger for the
+# psum-every-chunk path the one-shot protocol (ROADMAP item 3) will be
+# benchmarked against.
+_OBS_PROBE = r"""
+import json
+import jax, jax.numpy as jnp
+from repro import obs
+from repro.substrate import data_task_mesh
+from repro.stream.accumulate import ingest_sharded
+from repro.stream.state import init_stream_state
+
+M, N, P = %(m)d, %(n)d, %(p)d
+mesh = data_task_mesh(n_task=2)
+obs.reset()
+state = init_stream_state(M, P)
+X = jnp.ones((M, N, P), jnp.float32)
+y = jnp.ones((M, N), jnp.float32)
+state = ingest_sharded(state, X, y, mesh)
+jax.block_until_ready(state.Sigmas)
+snap = obs.snapshot()
+print("OBSJSON:" + json.dumps({
+    "counters": snap["counters"],
+    "data_size": mesh.shape["data"],
+    "task_size": mesh.shape["task"],
+}))
+"""
+
+
+def measured_collective_bytes(m: int = 8, n: int = 64,
+                              p: int = 200) -> dict:
+    """Measured bytes-on-the-wire for one sharded streaming ingest,
+    read from the obs collective counters inside an 8-device probe.
+
+    The byte model the counters implement (local-shard nbytes × axis
+    participants) is cross-checked against the arithmetic expectation
+    for this workload: the worker body psums its local (m_loc, p, p)
+    Sigma block and (m_loc, p) c block over the `data` axis of size d,
+    so each device wires d × (m_loc·p·p + m_loc·p) × 4 bytes. The
+    shard_map body traces ONCE for all devices, so calls count traced
+    collectives (per compilation), not per-device executions.
+    """
+    res = run_probe(_OBS_PROBE % {"m": m, "n": n, "p": p},
+                    n_devices=8, timeout=600)
+    out = res.stdout + res.stderr
+    match = re.search(r"OBSJSON:(.*)", out)
+    rec = {"probe_ok": res.returncode == 0 and match is not None,
+           "psum_calls": 0, "psum_bytes": 0, "expected_bytes": 0,
+           "matches_model": False}
+    if not rec["probe_ok"]:
+        return rec
+    payload = json.loads(match.group(1))
+    for c in payload["counters"]:
+        if c["labels"].get("op") != "psum_stats":
+            continue
+        if c["name"] == "collective.calls":
+            rec["psum_calls"] += int(c["value"])
+        elif c["name"] == "collective.bytes":
+            rec["psum_bytes"] += int(c["value"])
+    d = payload["data_size"]
+    m_loc = m // payload["task_size"]
+    rec["expected_bytes"] = d * (m_loc * p * p * 4 + m_loc * p * 4)
+    rec["matches_model"] = rec["psum_bytes"] == rec["expected_bytes"] > 0
+    return rec
+
+
 def main(out_dir: str = "experiments/paper"):
     t0 = time.time()
     bytes_rec = measured_bytes()
     probe = verify_one_round()
+    obs_rec = measured_collective_bytes()
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "communication.json"), "w") as f:
-        json.dump({"bytes": bytes_rec, "probe": probe}, f, indent=2)
+        json.dump({"bytes": bytes_rec, "probe": probe,
+                   "measured": obs_rec}, f, indent=2)
     dt = (time.time() - t0) * 1e6
     return [
         f"comm_lasso_bytes,{dt:.0f},0",
@@ -77,6 +152,9 @@ def main(out_dir: str = "experiments/paper"):
         f"comm_dsml_bytes,{dt:.0f},{bytes_rec['dsml_total']}",
         f"comm_ratio_central_over_dsml,{dt:.0f},{bytes_rec['centralized_over_dsml']:.1f}",
         f"comm_dsml_one_allgather,{dt:.0f},{probe['one_round']}",
+        f"comm_measured_psum_calls,{dt:.0f},{obs_rec['psum_calls']}",
+        f"comm_measured_psum_bytes,{dt:.0f},{obs_rec['psum_bytes']},"
+        f"matches_model={obs_rec['matches_model']}",
     ]
 
 

@@ -12,11 +12,17 @@ experiment sweeps persist JSON artifacts under experiments/paper/.
 
 Usage: python -m benchmarks.run [--only fig1,comm] [--runs N]
                                 [--json-out BENCH_kernels.json]
+                                [--telemetry PATH]
 
 `--json-out` additionally persists the kern section as machine-readable
-JSON (one object per row: name/us plus any derived fields like flops
-and speedup) so the perf trajectory is tracked across PRs —
-`benchmarks/check_regression.py` gates on it.
+JSON: `{"meta": {...}, "rows": [...]}` — run metadata (backend, device
+count, jax version, git SHA) plus the final telemetry snapshot under
+`meta`, one object per benchmark row (name/us plus any derived fields
+like flops and speedup) under `rows` — so the perf trajectory is
+tracked across PRs AND attributable to the environment that produced
+it. `benchmarks/check_regression.py` gates on it (it also still reads
+the pre-PR-7 flat-list format). `--telemetry PATH` writes the full obs
+snapshot of the whole benchmark run as its own artifact.
 """
 from __future__ import annotations
 
@@ -24,6 +30,33 @@ import argparse
 import json
 import sys
 import traceback
+
+
+def run_metadata() -> dict:
+    """Environment stamp for benchmark artifacts. Imports jax lazily —
+    this module must stay importable (for `rows_to_json`) without
+    paying a backend init."""
+    import platform
+    import subprocess
+
+    import jax
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=__file__.rsplit("/", 2)[0] or ".",
+        ).stdout.strip() or "unknown"
+    except Exception:
+        sha = "unknown"
+    return {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+        "python_version": platform.python_version(),
+        "platform": platform.platform(),
+        "git_sha": sha,
+    }
 
 
 def rows_to_json(rows) -> list:
@@ -54,6 +87,8 @@ def main() -> None:
                     help="averaging runs for the paper sweeps")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="also write the kern rows as JSON to PATH")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write the run's repro.obs snapshot to PATH")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -87,8 +122,14 @@ def main() -> None:
             for row in rows:
                 print(row, flush=True)
             if name == "kern" and args.json_out:
+                from repro import obs
+                artifact = {
+                    "meta": {**run_metadata(),
+                             "telemetry": obs.snapshot()},
+                    "rows": rows_to_json(rows),
+                }
                 with open(args.json_out, "w") as f:
-                    json.dump(rows_to_json(rows), f, indent=2)
+                    json.dump(artifact, f, indent=2)
                     f.write("\n")
                 print(f"# wrote {args.json_out}", file=sys.stderr)
                 wrote_json = True
@@ -96,6 +137,10 @@ def main() -> None:
             failures += 1
             print(f"{name}_FAILED,0,see stderr", flush=True)
             traceback.print_exc()
+    if args.telemetry:
+        from repro.obs import export as obs_export
+        obs_export.write_snapshot(args.telemetry, meta=run_metadata())
+        print(f"# wrote {args.telemetry}", file=sys.stderr)
     if args.json_out and not wrote_json:
         # never exit 0 leaving a stale baseline: the kern section was
         # deselected or failed, so the requested JSON was not produced

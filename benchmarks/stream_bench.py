@@ -7,6 +7,13 @@ the bench finds the smallest warm iteration budget that matches the
 cold solve's accuracy against a high-iteration reference, then times
 both. With >1 device (e.g. `make bench-stream-smoke` forcing 8 host
 devices) the SPMD data x task accumulator is timed as well.
+
+An instrumented pass replays ingest + refit under the same
+`stream.ingest` / `stream.refit` span names the service layer uses, so
+the `stream_obs_*` rows and `--obs-out` artifacts exercise the exact
+telemetry a deployed `StreamingDsmlService` emits (`make obs-report`
+summarizes them). With REPRO_OBS=0 those rows degrade to zeros instead
+of failing — the disabled path must stay runnable.
 """
 from __future__ import annotations
 
@@ -16,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.paper_common import time_fn as _time
+from repro import obs
 from repro.core import gen_regression
 from repro.stream import ingest, init_stream_state, refit
 from repro.stream.accumulate import ingest_sharded
@@ -24,6 +32,9 @@ from repro.stream.accumulate import ingest_sharded
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="small CI sizes")
+    ap.add_argument("--obs-out", default=None, metavar="PATH",
+                    help="write the obs snapshot (and a .trace.json "
+                         "Chrome trace next to it) after the bench")
     args = ap.parse_args(argv)
     m, p, n_chunk = (4, 64, 256) if args.smoke else (8, 256, 1024)
     cold_iters = 200 if args.smoke else 400
@@ -85,6 +96,43 @@ def main(argv=None):
                 f"err={err_cold:.2e}")
     rows.append(f"stream_refit_warm_iters{warm_iters},{t_warm:.0f},"
                 f"speedup={t_cold / t_warm:.2f}x")
+
+    # -- instrumented pass: service-layer span names ----------------------
+    # blocked inside the span so the ingest span measures completed work
+    # here (the service's own span is a dispatch-latency upper bound)
+    for Xc, yc in chunks:
+        with obs.span("stream.ingest"):
+            jax.block_until_ready(ingest(state, Xc, yc))
+        obs.inc("stream.ingest.rows", m * n_chunk)
+    with obs.span("stream.refit"):
+        jax.block_until_ready(refit(state, lam, mu, Lam,
+                                    lasso_iters=warm_iters,
+                                    debias_iters=warm_iters, warm=True)[0])
+    obs.set_gauge("stream.bench.ingest_rows_per_s",
+                  m * n_chunk / (us * 1e-6))
+    obs.set_gauge("stream.bench.refit_cold_us", t_cold)
+    obs.set_gauge("stream.bench.refit_warm_us", t_warm)
+
+    ing = obs.hist_stats("stream.ingest.ms")
+    ref_ms = obs.hist_stats("stream.refit.ms")
+    ing_rows = obs.counter_total("stream.ingest.rows")
+    obs_rate = (ing_rows / (ing["sum"] * 1e-3)
+                if ing and ing["sum"] > 0 else 0.0)
+    rows.append(f"stream_obs_ingest_rate,"
+                f"{ing['mean'] * 1e3 if ing else 0:.0f},"
+                f"rows_per_s={obs_rate:.0f}")
+    rows.append(f"stream_obs_refit_latency,"
+                f"{ref_ms['mean'] * 1e3 if ref_ms else 0:.0f},"
+                f"refits={ref_ms['count'] if ref_ms else 0}")
+
+    if args.obs_out:
+        from repro.obs import export as obs_export
+        obs_export.write_snapshot(args.obs_out,
+                                  meta={"bench": "stream",
+                                        "smoke": bool(args.smoke)})
+        base = args.obs_out[:-5] if args.obs_out.endswith(".json") \
+            else args.obs_out
+        obs_export.write_chrome_trace(base + ".trace.json")
     return rows
 
 

@@ -13,6 +13,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import ar_covariance, hamming, sample_coefficients
 from repro.stream import StreamingDsmlService
 
@@ -50,6 +51,9 @@ def main(argv=None):
                          "support moves")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI")
+    ap.add_argument("--obs-out", default=None, metavar="PATH",
+                    help="write the telemetry snapshot (and a "
+                         ".trace.json Chrome trace next to it)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.m, args.p, args.s = 4, 48, 5
@@ -99,15 +103,37 @@ def main(argv=None):
     svc.refit()
     h = int(hamming(svc.state.support, support))
     err = float(jnp.max(jnp.abs(svc.state.beta_tilde - B.T)))
+    # serve one scoring round so the trace timeline shows the full
+    # ingest -> refit -> predict lifecycle of the service
+    jax.block_until_ready(svc.predict(Xs))
     print(f"final: generation {svc.generation}, support hamming vs current "
           f"regime = {h} (decay {'forgets' if args.decay < 1 else 'keeps'} "
           f"the old regime)")
+
+    # telemetry-derived headlines (None-safe: REPRO_OBS=0 zeroes them)
+    ing = obs.hist_stats("stream.ingest.ms")
+    ref_ms = obs.hist_stats("stream.refit.ms")
+    ing_rows = obs.counter_total("stream.ingest.rows")
+    obs_rate = (ing_rows / (ing["sum"] * 1e-3)
+                if ing and ing["sum"] > 0 else 0.0)
+    if args.obs_out:
+        from repro.obs import export as obs_export
+        obs_export.write_snapshot(
+            args.obs_out,
+            meta={"example": "stream_online", "smoke": bool(args.smoke)})
+        base = args.obs_out[:-5] if args.obs_out.endswith(".json") \
+            else args.obs_out
+        obs_export.write_chrome_trace(base + ".trace.json")
+        print(f"wrote {args.obs_out} and {base}.trace.json")
     return {
         "final_hamming": h,
         "final_est_err": err,
         "generations": int(svc.generation),
         "refits_during_stream": refits_during_stream,
         "samples_seen": float(svc.samples_seen),
+        "obs_ingest_rows_per_s": obs_rate,
+        "obs_refit_latency_ms": ref_ms["mean"] if ref_ms else 0.0,
+        "obs_refits_recorded": ref_ms["count"] if ref_ms else 0,
     }
 
 

@@ -47,6 +47,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.prox import soft_threshold
 from repro.core.solvers import lasso_stats_step_scale, power_iteration
 from repro.kernels.ista_step.ops import fista_step_batched
@@ -61,6 +62,30 @@ from repro.kernels.rank_update.ops import rank_routes_to_oracle, rank_update
 def power_iteration_batched(Sigmas: jnp.ndarray, iters: int = 64) -> jnp.ndarray:
     """Largest eigenvalue per task of a (m, p, p) PSD stack."""
     return jax.vmap(partial(power_iteration, iters=iters))(Sigmas)
+
+
+def _trace_clean() -> bool:
+    # fail CLOSED when the installed jax no longer exposes the probe:
+    # skipping a telemetry record is free, scalarizing a tracer is not
+    return bool(getattr(jax.core, "trace_state_clean", lambda: False)())
+
+
+def _record_solve(kind: str, n_iters, ceiling: int) -> None:
+    """Record a solve's iterations-used vs its `iters` ceiling (and the
+    early-exit verdict the `tol=`/`return_iters` machinery implies).
+    Eager-only by construction: when a caller jits a public wrapper the
+    whole wrapper body runs under trace and `int(n_iters)` would
+    scalarize a tracer — so this is a no-op unless the trace state is
+    clean (RL107 territory; RL108 additionally lint-proves no jit root
+    in this module can reach an obs call)."""
+    if not obs.enabled() or not _trace_clean():
+        return
+    used = int(n_iters)
+    obs.inc("engine.solve.calls", kind=kind)
+    obs.observe("engine.solve.iters_used", used, kind=kind)
+    obs.observe("engine.solve.iters_ceiling", ceiling, kind=kind)
+    if used < ceiling:
+        obs.inc("engine.solve.early_exit", kind=kind)
 
 
 def sufficient_stats(Xs: jnp.ndarray, ys: jnp.ndarray,
@@ -211,6 +236,7 @@ def solve_lasso_batched(Sigmas: jnp.ndarray, cs: jnp.ndarray, lam, *,
         Sigmas, cs, lam, etas, beta0, tol, iters=iters,
         use_kernel=use_kernel, interpret=interpret, block=block,
         check_every=check_every)
+    _record_solve("lasso", n_iters, iters)
     return (out, n_iters) if return_iters else out
 
 
@@ -255,8 +281,6 @@ def _solve_lasso_batched(Sigmas, cs, lam, etas, beta0, tol, *, iters,
     return (x[..., 0] if squeeze else x), n_iters
 
 
-@partial(jax.jit, static_argnames=("iters", "use_kernel", "interpret",
-                                   "block"))
 def solve_lasso_grid(Sigmas: jnp.ndarray, cs: jnp.ndarray,
                      lams: jnp.ndarray, *, iters: int = 400,
                      etas: jnp.ndarray | None = None,
@@ -270,7 +294,29 @@ def solve_lasso_grid(Sigmas: jnp.ndarray, cs: jnp.ndarray,
     tasks sharing tiled statistics — the whole regularization-path sweep
     (lam = 0 included) costs one engine call instead of k solver runs.
     Step sizes depend only on Sigma and are shared across the grid.
+
+    Like every public engine entry point this is an EAGER wrapper over
+    a jitted inner solve: policy resolution (backend default, autotune
+    lookup) and telemetry happen out here with concrete values, the
+    math compiles once in `_solve_lasso_grid`.
     """
+    m, p = cs.shape
+    lams = jnp.asarray(lams, cs.dtype)
+    k = lams.shape[0]
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    block = resolve_block_policy(k * m, p, 1, cs.dtype, block, use_kernel)
+    B = _solve_lasso_grid(Sigmas, cs, lams, etas, iters=iters,
+                          use_kernel=use_kernel, interpret=interpret,
+                          block=block)
+    _record_solve("lasso_grid", iters, iters)
+    return B
+
+
+@partial(jax.jit, static_argnames=("iters", "use_kernel", "interpret",
+                                   "block"))
+def _solve_lasso_grid(Sigmas, cs, lams, etas, *, iters, use_kernel,
+                      interpret, block):
     m, p = cs.shape
     lams = jnp.asarray(lams, cs.dtype)
     k = lams.shape[0]
@@ -280,13 +326,13 @@ def solve_lasso_grid(Sigmas: jnp.ndarray, cs: jnp.ndarray,
     cs_g = jnp.tile(cs, (k, 1))
     etas_g = jnp.tile(jnp.asarray(etas, cs.dtype).reshape(-1), (k,))
     lam_g = jnp.repeat(lams, m)
-    B = solve_lasso_batched(Sig_g, cs_g, lam_g, iters=iters, etas=etas_g,
-                            use_kernel=use_kernel, interpret=interpret,
-                            block=block)
+    B, _ = _solve_lasso_batched(Sig_g, cs_g, lam_g, etas_g, None, None,
+                                iters=iters, use_kernel=use_kernel,
+                                interpret=interpret, block=block,
+                                check_every=25)
     return B.reshape(k, m, p)
 
 
-@partial(jax.jit, static_argnames=("iters",))
 def solve_lasso_eq2(Sigmas: jnp.ndarray, cs: jnp.ndarray, lam, *,
                     iters: int = 400,
                     beta0: jnp.ndarray | None = None,
@@ -304,23 +350,51 @@ def solve_lasso_eq2(Sigmas: jnp.ndarray, cs: jnp.ndarray, lam, *,
     solution). `lam_max` (m,) are precomputed per-task largest
     eigenvalues; callers that also run the debias solve pass one shared
     power iteration instead of paying it twice."""
+    m, p = cs.shape
+    use_kernel = jax.default_backend() == "tpu"
+    block = resolve_block_policy(m, p, 1, cs.dtype, None, use_kernel)
+    out = _solve_lasso_eq2(Sigmas, cs, lam, beta0, lam_max, iters=iters,
+                           use_kernel=use_kernel, block=block)
+    _record_solve("lasso_eq2", iters, iters)
+    return out
+
+
+@partial(jax.jit, static_argnames=("iters", "use_kernel", "block"))
+def _solve_lasso_eq2(Sigmas, cs, lam, beta0, lam_max, *, iters,
+                     use_kernel, block):
     if lam_max is None:
         etas = jax.vmap(lasso_stats_step_scale)(Sigmas)
     else:
         etas = 2.0 / jnp.maximum(2.0 * lam_max, 1e-12)
-    return solve_lasso_batched(Sigmas, cs, 0.5 * jnp.asarray(lam),
-                               iters=iters, etas=etas, beta0=beta0)
+    out, _ = _solve_lasso_batched(Sigmas, cs, 0.5 * jnp.asarray(lam),
+                                  etas, beta0, None, iters=iters,
+                                  use_kernel=use_kernel, interpret=None,
+                                  block=block, check_every=25)
+    return out
 
 
-@partial(jax.jit, static_argnames=("iters",))
 def solve_lasso_eq2_grid(Sigmas: jnp.ndarray, cs: jnp.ndarray, lams, *,
                          iters: int = 400) -> jnp.ndarray:
     """`solve_lasso_grid` in the paper's eq.-2 convention (see
     `solve_lasso_eq2`). Sigmas (m, p, p), cs (m, p), lams (k,) ->
     (k, m, p)."""
+    m, p = cs.shape
+    lams = jnp.asarray(lams, cs.dtype)
+    k = lams.shape[0]
+    use_kernel = jax.default_backend() == "tpu"
+    block = resolve_block_policy(k * m, p, 1, cs.dtype, None, use_kernel)
+    out = _solve_lasso_eq2_grid(Sigmas, cs, lams, iters=iters,
+                                use_kernel=use_kernel, block=block)
+    _record_solve("lasso_eq2_grid", iters, iters)
+    return out
+
+
+@partial(jax.jit, static_argnames=("iters", "use_kernel", "block"))
+def _solve_lasso_eq2_grid(Sigmas, cs, lams, *, iters, use_kernel, block):
     etas = jax.vmap(lasso_stats_step_scale)(Sigmas)
-    return solve_lasso_grid(Sigmas, cs, 0.5 * jnp.asarray(lams),
-                            iters=iters, etas=etas)
+    return _solve_lasso_grid(Sigmas, cs, 0.5 * lams, etas, iters=iters,
+                             use_kernel=use_kernel, interpret=None,
+                             block=block)
 
 
 def solve_logistic_lasso_batched(Xs: jnp.ndarray, ys: jnp.ndarray, lam, *,
@@ -375,6 +449,7 @@ def solve_logistic_lasso_batched(Xs: jnp.ndarray, ys: jnp.ndarray, lam, *,
         Xs, ys, lam, etas, beta0, grad_scale, tol, iters=iters, prox=prox,
         momentum=momentum, check_every=check_every, use_kernel=use_kernel,
         interpret=interpret, block=block)
+    _record_solve("logistic", n_iters, iters)
     return (out, n_iters) if return_iters else out
 
 
@@ -443,7 +518,6 @@ def scaled_identity_m0(Sigmas: jnp.ndarray) -> jnp.ndarray:
         jnp.diagonal(Sigmas, axis1=-2, axis2=-1), 1e-12)[:, None, :]
 
 
-@partial(jax.jit, static_argnames=("iters",))
 def inverse_hessian_batched(Sigmas: jnp.ndarray, mu, iters: int = 600,
                             M0: jnp.ndarray | None = None,
                             lam_max: jnp.ndarray | None = None
@@ -455,12 +529,26 @@ def inverse_hessian_batched(Sigmas: jnp.ndarray, mu, iters: int = 600,
     default is the scaled identity of the single-task solver. `lam_max`
     (m,) lets callers share one power iteration with the lasso solve."""
     m, p, _ = Sigmas.shape
+    use_kernel = jax.default_backend() == "tpu"
+    block = resolve_block_policy(m, p, p, Sigmas.dtype, None, use_kernel)
+    out = _inverse_hessian_batched(Sigmas, mu, M0, lam_max, iters=iters,
+                                   use_kernel=use_kernel, block=block)
+    _record_solve("debias", iters, iters)
+    return out
+
+
+@partial(jax.jit, static_argnames=("iters", "use_kernel", "block"))
+def _inverse_hessian_batched(Sigmas, mu, M0, lam_max, *, iters,
+                             use_kernel, block):
+    m, p, _ = Sigmas.shape
     if lam_max is None:
         lam_max = power_iteration_batched(Sigmas)
     etas = 1.0 / jnp.maximum(lam_max, 1e-12)
     eye = jnp.broadcast_to(jnp.eye(p, dtype=Sigmas.dtype), (m, p, p))
     C0 = scaled_identity_m0(Sigmas) if M0 is None else \
         jnp.swapaxes(M0, -1, -2)
-    Cs = solve_lasso_batched(Sigmas, eye, mu, iters=iters, etas=etas,
-                             beta0=C0)
+    Cs, _ = _solve_lasso_batched(Sigmas, eye, mu, etas, C0, None,
+                                 iters=iters, use_kernel=use_kernel,
+                                 interpret=None, block=block,
+                                 check_every=25)
     return jnp.swapaxes(Cs, -1, -2)

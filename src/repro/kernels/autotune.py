@@ -38,6 +38,7 @@ from typing import Callable, Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels.ista_step.kernel import fista_step_batched_pallas
 from repro.kernels.ista_step.ops import resolve_blocks
 from repro.kernels.logistic_grad.kernel import logistic_grad_pallas
@@ -89,14 +90,18 @@ def _migrate(entries: dict) -> Tuple[dict, bool]:
     oracle would permanently lose that shape its kernel path."""
     migrated, changed = {}, False
     for k, v in entries.items():
+        rewritten = False
         if "/" not in k:
-            k, changed = f"fista_step/{k}", True
+            k, changed, rewritten = f"fista_step/{k}", True, True
         if k.startswith("logistic_grad/") and not isinstance(v, list):
             dims = re.search(r"_n(\d+)_p(\d+)_", k)
             if dims:
                 n_k, p_k = int(dims.group(1)), int(dims.group(2))
                 v = list(resolve_logistic_blocks(n_k, p_k, int(v)))
-                changed = True
+                changed, rewritten = True, True
+        if rewritten:
+            obs.inc("autotune.cache", kernel=k.split("/", 1)[0],
+                    event="migrated")
         migrated[k] = v
     return migrated, changed
 
@@ -190,16 +195,19 @@ def _autotune(kernel: str, dims: Dict[str, int], default, candidates,
     deterministic default instead of sweeping.
     """
     if jax.process_count() > 1:
+        obs.inc("autotune.cache", kernel=kernel, event="default_multiprocess")
         return default
     backend = jax.default_backend() if backend is None else backend
     key = cache_key(kernel, backend, dims, dtype)
     if key in _memory_cache:
+        obs.inc("autotune.cache", kernel=kernel, event="hit_memory")
         return _memory_cache[key]
     disk = _load_disk() if use_disk else {}
     if key in disk:
         v = disk[key]
         blk = tuple(int(b) for b in v) if isinstance(v, list) else int(v)
         _memory_cache[key] = blk
+        obs.inc("autotune.cache", kernel=kernel, event="hit_disk")
         return blk
 
     # A warm cache is servable anywhere (the lookups above), but the
@@ -212,15 +220,21 @@ def _autotune(kernel: str, dims: Dict[str, int], default, candidates,
     # (assume a trace may be active): a never-swept cache serves the
     # safe default, a trace-noise-poisoned cache is permanent.
     if not getattr(jax.core, "trace_state_clean", lambda: False)():
+        obs.inc("autotune.cache", kernel=kernel, event="deferred_trace")
         return default
 
+    obs.inc("autotune.cache", kernel=kernel, event="miss_sweep")
     interp = (backend != "tpu") if interpret is None else interpret
     fn_for = make_sweep(interp)
     best_us, best = float("inf"), default
-    for cand in candidates:
-        us = _time_candidate(fn_for(cand), reps)
-        if us < best_us:
-            best_us, best = us, cand
+    with obs.span("autotune.sweep", kernel=kernel):
+        for cand in candidates:
+            us = _time_candidate(fn_for(cand), reps)
+            obs.observe("autotune.candidate_us", us, kernel=kernel,
+                        candidate="x".join(str(b) for b in cand)
+                        if isinstance(cand, tuple) else str(cand))
+            if us < best_us:
+                best_us, best = us, cand
     _memory_cache[key] = best
     if use_disk:
         disk[key] = list(best) if isinstance(best, tuple) else best

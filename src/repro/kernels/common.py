@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import obs
+
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
@@ -104,3 +106,23 @@ def is_ragged_samples(n: int, p: int) -> bool:
     TPU tiling cannot legally cover go to the jnp oracle. Shared with
     the engine's block policies so the two can never desync."""
     return bool(n % 8 or p % 8)
+
+
+def record_route(kernel: str, reason: str | None, *, blocks=None) -> None:
+    """THE telemetry funnel for dispatcher routing decisions — the one
+    audited exception to lint code RL108 (no `repro.obs` calls in
+    jit-reachable code). Dispatchers run at trace time under jit, so
+    these counters count COMPILATIONS, not executions; every argument
+    is a Python-concrete shape/policy value, never a tracer, which is
+    why routing through here is safe where a raw obs call is not.
+
+    `reason` is None on the kernel path, else why the oracle won
+    (`ragged` / `sliver` / `vmem_budget` / `backend`); `blocks` is the
+    resolved tile tuple."""
+    if not obs.enabled():
+        return
+    obs.inc("dispatch.route", kernel=kernel,
+            outcome="kernel" if reason is None else "oracle",
+            reason=reason or "kernel",
+            blocks="none" if blocks is None
+            else "x".join(str(b) for b in blocks))

@@ -18,7 +18,8 @@ from typing import Tuple
 import jax.numpy as jnp
 
 from repro.kernels.common import (
-    aligned_fit_block, degrades_to_slivers, on_tpu, validate_block,
+    aligned_fit_block, degrades_to_slivers, on_tpu, record_route,
+    validate_block,
 )
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
@@ -52,7 +53,11 @@ def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
     bq_, bk_ = resolve_flash_blocks(S, T, (bq, bk))
     interp = (not on_tpu()) if interpret is None else interpret
     if flash_routes_to_oracle(S, T, (bq, bk)):
+        record_route("flash_attention",
+                     "ragged" if (S % 8 or T % 8) else "sliver",
+                     blocks=(bq_, bk_))
         return flash_attention_ref(q, k, v, causal=causal, window=window)
+    record_route("flash_attention", None, blocks=(bq_, bk_))
 
     qf = q.transpose(0, 2, 1, 3).reshape(B * N, S, H)
     kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * N, T, H)

@@ -13,7 +13,8 @@ dispatcher judges by.
 from __future__ import annotations
 
 from repro.kernels.common import (
-    aligned_fit_block, degrades_to_slivers, on_tpu, validate_block,
+    aligned_fit_block, degrades_to_slivers, on_tpu, record_route,
+    validate_block,
 )
 from repro.kernels.group_threshold.kernel import group_threshold_pallas
 from repro.kernels.group_threshold.ref import group_threshold_ref
@@ -44,7 +45,10 @@ def group_threshold(B, Lam, *, block=None, interpret: bool | None = None):
     bp = resolve_group_block(p, block)
     interp = (not on_tpu()) if interpret is None else interpret
     if group_routes_to_oracle(p, block):
+        record_route("group_threshold", "ragged" if p % 8 else "sliver",
+                     blocks=(bp,))
         out, keep = group_threshold_ref(B, Lam)
         return out, keep
+    record_route("group_threshold", None, blocks=(bp,))
     out, keep = group_threshold_pallas(B, Lam, bp=bp, interpret=interp)
     return out, keep[:, 0].astype(bool)

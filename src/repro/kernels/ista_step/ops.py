@@ -13,7 +13,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import aligned_fit_block, validate_block
+from repro.kernels.common import (
+    aligned_fit_block, record_route, validate_block,
+)
 from repro.kernels.common import on_tpu as _on_tpu
 from repro.kernels.ista_step.kernel import (
     fista_step_batched_pallas, ista_step_batched_pallas, ista_step_pallas,
@@ -67,6 +69,8 @@ def ista_step_batched(Sigmas, betas, cs, etas, lam, *, block: int = 128,
     # a malformed block must raise on every path
     bp, br, bk = resolve_blocks(p, r, block)
     interp = (not _on_tpu()) if interpret is None else interpret
+    record_route("ista_step_batched", "ragged" if is_ragged(p, r) else None,
+                 blocks=(bp, br, bk))
     if is_ragged(p, r):
         out = ista_step_batched_ref(Sigmas, betas, cs, etas, lam)
     else:
@@ -92,6 +96,8 @@ def fista_step_batched(Sigmas, zs, xs, cs, etas, lam, theta, *,
     m, p, r = zs.shape
     bp, br, bk = resolve_blocks(p, r, block)    # validate on every path
     interp = (not _on_tpu()) if interpret is None else interpret
+    record_route("fista_step_batched", "ragged" if is_ragged(p, r) else None,
+                 blocks=(bp, br, bk))
     if is_ragged(p, r):
         xn, zn = fista_step_batched_ref(Sigmas, zs, xs, cs, etas, lam, theta)
     else:
@@ -111,6 +117,8 @@ def ista_step(Sigma, beta, c, eta, lam, *, block: int = 128,
     p, r = beta.shape
     bp, br, bk = resolve_blocks(p, r, block)    # validate on every path
     interp = (not _on_tpu()) if interpret is None else interpret
+    record_route("ista_step", "ragged" if is_ragged(p, r) else None,
+                 blocks=(bp, br, bk))
     if is_ragged(p, r):
         out = ista_step_ref(Sigma, beta, c, eta, lam)   # ragged fallback
     else:

@@ -19,11 +19,11 @@ gradient accumulator itself outgrows the budget).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 from repro.kernels.common import (
     MIN_TILE, aligned_fit_block, degrades_to_slivers, on_tpu,
-    validate_block,
+    record_route, validate_block,
 )
 from repro.kernels.common import is_ragged_samples  # re-export (tests/engine)
 from repro.kernels.logistic_grad.kernel import (
@@ -96,27 +96,39 @@ def resolve_logistic_blocks(n: int, p: int, block=None) -> Tuple[int, int]:
     return bn, bp
 
 
-def _route_and_resolve(n: int, p: int, block) -> Tuple[bool, int, int]:
+def _route_and_resolve(n: int, p: int,
+                       block) -> Tuple[Optional[str], int, int]:
     """ONE block resolution feeding both the routing verdict and the
     dispatch tiles, so the predicate can never approve a tiling the
-    dispatcher then resolves differently. Routed when: ragged axes;
+    dispatcher then resolves differently. Returns (reason, bn, bp)
+    where reason is None on the kernel path, else the telemetry label
+    for why the oracle won. Routed when: ragged axes (`ragged`);
     sample tiles degraded to slivers vs the request (e.g. n = 1016 =
-    8*127 against the 128 default); an explicitly requested feature
-    tile that degrades the same way; a budgeted default bp that itself
-    collapsed to a sliver (p past the full-lane budget with no mid-size
-    aligned divisor, e.g. p = 8168 = 8*1021 resolves to bp = 8); or a
-    resolved tiling still over the per-tile VMEM budget (only p so
-    large the gradient accumulator outgrows it, by construction)."""
+    8*127 against the 128 default) or an explicitly requested feature
+    tile that degrades the same way (`sliver`); a resolved tiling over
+    the per-tile VMEM budget — only p so large the gradient accumulator
+    outgrows it, by construction (`vmem_budget`); or a budgeted default
+    bp that itself collapsed to a sliver under the budget (p past the
+    full-lane regime with no mid-size aligned divisor, e.g. p = 8168 =
+    8*1021 resolves to bp = 8; also `sliver`). The clause SET is what
+    routes; the order only picks which label wins when several apply
+    (the over-budget p >= 16384 regime also collapses its default bp,
+    and `vmem_budget` is the informative cause)."""
     bn_req, bp_req = validate_block(block, 2, "(bn, bp)",
                                     arities=_BLOCK_ARITIES)
     bn, bp = resolve_logistic_blocks(n, p, block)
-    routed = (
-        is_ragged_samples(n, p)
-        or degrades_to_slivers(n, 128 if bn_req is None else bn_req)
-        or (bp_req is not None and degrades_to_slivers(p, bp_req))
-        or (bp_req is None and bp < min(p, MIN_TILE))
-        or kernel_vmem_bytes(p, bn, bp) > LOGISTIC_VMEM_BUDGET)
-    return routed, bn, bp
+    if is_ragged_samples(n, p):
+        reason = "ragged"
+    elif (degrades_to_slivers(n, 128 if bn_req is None else bn_req)
+          or (bp_req is not None and degrades_to_slivers(p, bp_req))):
+        reason = "sliver"
+    elif kernel_vmem_bytes(p, bn, bp) > LOGISTIC_VMEM_BUDGET:
+        reason = "vmem_budget"
+    elif bp_req is None and bp < min(p, MIN_TILE):
+        reason = "sliver"
+    else:
+        reason = None
+    return reason, bn, bp
 
 
 def routes_to_oracle(n: int, p: int, block=None) -> bool:
@@ -124,7 +136,7 @@ def routes_to_oracle(n: int, p: int, block=None) -> bool:
     `_route_and_resolve` for the clauses). The engine's block policy
     shares this so it never sweeps a shape the dispatcher will not
     serve."""
-    return _route_and_resolve(n, p, block)[0]
+    return _route_and_resolve(n, p, block)[0] is not None
 
 
 def logistic_grad(Xs, ys, B, *, block=None,
@@ -139,8 +151,9 @@ def logistic_grad(Xs, ys, B, *, block=None,
     """
     m, n, p = Xs.shape
     interp = (not on_tpu()) if interpret is None else interpret
-    routed, bn, bp = _route_and_resolve(n, p, block)
-    if routed:
+    reason, bn, bp = _route_and_resolve(n, p, block)
+    record_route("logistic_grad", reason, blocks=(bn, bp))
+    if reason is not None:
         return logistic_grad_ref(Xs, ys, B)
     return logistic_grad_pallas(Xs, ys, B, bn=bn, bp=bp, interpret=interp)
 
@@ -152,8 +165,9 @@ def logistic_grad_unfused(Xs, ys, B, *, block=None,
     and as a second kernel-path parity anchor in tests."""
     m, n, p = Xs.shape
     interp = (not on_tpu()) if interpret is None else interpret
-    routed, bn, bp = _route_and_resolve(n, p, block)
-    if routed:
+    reason, bn, bp = _route_and_resolve(n, p, block)
+    record_route("logistic_grad_unfused", reason, blocks=(bn, bp))
+    if reason is not None:
         return logistic_grad_ref(Xs, ys, B)
     return logistic_grad_unfused_pallas(Xs, ys, B, bn=bn, bp=bp,
                                         interpret=interp)

@@ -8,13 +8,13 @@ CPU default path perturbs nothing downstream.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
 from repro.kernels.common import (
     aligned_fit_block, degrades_to_slivers, is_ragged_samples, on_tpu,
-    validate_block,
+    record_route, validate_block,
 )
 from repro.kernels.rank_update.kernel import (
     rank_update_pallas, rank_update_unfused_pallas,
@@ -54,6 +54,21 @@ def resolve_rank_blocks(n: int, p: int, block) -> Tuple[int, int]:
     return aligned_fit_block(p, bp), aligned_fit_block(n, bn)
 
 
+def _rank_route_reason(n: int, p: int, block=128) -> Optional[str]:
+    """Routing verdict plus its telemetry label: None on the kernel
+    path, else `ragged` / `sliver` / `vmem_budget` (same clause set as
+    ever; the order only picks the label when several apply)."""
+    bp_req, bn_req = validate_block(block, 2, "(bp, bn)")
+    bp, bn = resolve_rank_blocks(n, p, block)
+    if is_ragged_samples(n, p):
+        return "ragged"
+    if degrades_to_slivers(n, bn_req) or degrades_to_slivers(p, bp_req):
+        return "sliver"
+    if rank_vmem_bytes(bp, bn) > RANK_VMEM_BUDGET:
+        return "vmem_budget"
+    return None
+
+
 def rank_routes_to_oracle(n: int, p: int, block=128) -> bool:
     """Routing predicate shared with the engine's rank block policy:
     ragged shapes, shapes whose requested tiles degrade to sliver grids
@@ -61,11 +76,7 @@ def rank_routes_to_oracle(n: int, p: int, block=128) -> bool:
     grid step busts `RANK_VMEM_BUDGET` (an explicit block= large enough
     that the X slabs or the Sigma tile outgrow VMEM) go to the jnp
     oracle."""
-    bp_req, bn_req = validate_block(block, 2, "(bp, bn)")
-    bp, bn = resolve_rank_blocks(n, p, block)
-    return (is_ragged_samples(n, p) or degrades_to_slivers(n, bn_req)
-            or degrades_to_slivers(p, bp_req)
-            or rank_vmem_bytes(bp, bn) > RANK_VMEM_BUDGET)
+    return _rank_route_reason(n, p, block) is not None
 
 
 def rank_update(Xs, ys, weights=None, *, block=128,
@@ -87,8 +98,11 @@ def rank_update(Xs, ys, weights=None, *, block=128,
     if use_kernel is None:
         use_kernel = on_tpu()
     interp = (not on_tpu()) if interpret is None else interpret
-    if not use_kernel or rank_routes_to_oracle(n, p, block):
+    reason = _rank_route_reason(n, p, block)
+    if not use_kernel or reason is not None:
+        record_route("rank_update", reason or "backend", blocks=(bp, bn))
         return rank_update_ref(Xs, ys, weights)
+    record_route("rank_update", None, blocks=(bp, bn))
     return rank_update_pallas(Xs, ys, weights, bp=bp, bn=bn,
                               interpret=interp)
 
@@ -102,7 +116,9 @@ def rank_update_unfused(Xs, ys, weights=None, *, block=128,
     m, n, p = Xs.shape
     bp, bn = resolve_rank_blocks(n, p, block)
     interp = (not on_tpu()) if interpret is None else interpret
-    if rank_routes_to_oracle(n, p, block):
+    reason = _rank_route_reason(n, p, block)
+    record_route("rank_update_unfused", reason, blocks=(bp, bn))
+    if reason is not None:
         return rank_update_ref(Xs, ys, weights)
     return rank_update_unfused_pallas(Xs, ys, weights, bp=bp, bn=bn,
                                       interpret=interp)

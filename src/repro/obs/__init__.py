@@ -1,0 +1,36 @@
+"""repro.obs — process-local runtime telemetry.
+
+Usage from library code (hot paths check `enabled()` first):
+
+    from repro import obs
+    obs.inc("dispatch.route", kernel="logistic_grad", outcome="kernel")
+    with obs.span("stream.refit"):
+        ...
+
+Disable with `REPRO_OBS=0` in the environment (checked once at
+import). Export helpers live in `repro.obs.export`; summarize a saved
+snapshot with `python -m repro.obs SNAPSHOT.json`. Never record from
+jit-reachable code — lint code RL108 enforces this (DESIGN.md §14).
+"""
+from .registry import (  # noqa: F401
+    MAX_TRACE_EVENTS,
+    Registry,
+    counter_total,
+    enabled,
+    get_registry,
+    hist_stats,
+    inc,
+    observe,
+    reset,
+    set_gauge,
+    span,
+)
+from .export import (  # noqa: F401
+    chrome_trace,
+    load_snapshot,
+    snapshot,
+    summarize,
+    to_prometheus,
+    write_chrome_trace,
+    write_snapshot,
+)

@@ -1,0 +1,30 @@
+"""Optional bridge to `jax.profiler.trace`.
+
+Kept out of `repro.obs.__init__` so the telemetry core never imports
+jax (zero-dependency contract, DESIGN.md §14). Import this module
+explicitly when you want XLA-level traces alongside the obs timeline:
+
+    from repro.obs import jaxprof
+    with jaxprof.profiler_trace("/tmp/jax-trace"):
+        run_workload()
+"""
+from __future__ import annotations
+
+import contextlib
+
+
+@contextlib.contextmanager
+def profiler_trace(log_dir: str, **kwargs):
+    """Wrap a block in `jax.profiler.trace(log_dir)`; degrades to a
+    no-op (with a registry counter marking the skip) when jax is not
+    importable, so callers never need their own try/except."""
+    from . import registry as _registry
+    try:
+        import jax
+    except Exception:
+        _registry.inc("obs.jaxprof.unavailable")
+        yield
+        return
+    _registry.inc("obs.jaxprof.trace")
+    with jax.profiler.trace(log_dir, **kwargs):
+        yield

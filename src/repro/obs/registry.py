@@ -1,0 +1,294 @@
+"""Process-local telemetry core: counters, gauges, histograms, spans.
+
+Zero-dependency by contract — this module (and everything else the
+`repro.obs` package imports at module scope) is pure stdlib and NEVER
+imports jax, so instrumented library code adds no import weight and the
+snapshot tooling runs in jax-free contexts (pre-commit hooks, log
+scrapers). The optional `jax.profiler` bridge lives in
+`repro.obs.jaxprof` behind a lazy import for exactly this reason.
+
+Semantics (DESIGN.md §14):
+
+* **Counters** are monotonically increasing sums, **gauges** are
+  last-write-wins values, **histograms** keep count/sum/min/max (enough
+  for rates and latency headlines without bucket configuration), and
+  **spans** time a `with` block on the monotonic clock, recording both
+  a `<name>.ms` histogram observation and a Chrome trace event.
+* Every metric takes free-form keyword **labels**; a (name, labels)
+  pair is one series. Labels must be low-cardinality Python scalars
+  (kernel names, route reasons, axis names — never array values).
+* **`REPRO_OBS=0`** (or `false`/`off`) in the environment hard-disables
+  the process-global registry at import time: every recording call
+  becomes a single attribute-check no-op and spans return a shared
+  null context manager, so disabled-mode overhead is a function call —
+  `benchmarks/check_regression.py` gates it at <2% of every tracked
+  kernel pair.
+* All mutation happens under one lock — safe for the threaded serving
+  paths — and the trace-event buffer is capped (oldest runs drop
+  nothing; new events past the cap are counted as dropped instead of
+  growing without bound).
+
+Recording under jit: never call these from jit-reachable code (lint
+code RL108). Dispatch-time decisions that genuinely happen at trace
+time (kernel routing, autotune cache events, collective byte models)
+funnel through audited helpers — `kernels.common.record_route`,
+`substrate.collectives` — that record only Python-concrete values;
+everything else records eagerly, guarded by
+`jax.core.trace_state_clean` at the call site.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+# cap on buffered Chrome trace events; past it, events are dropped and
+# counted (a long-running service must not grow a timeline unbounded)
+MAX_TRACE_EVENTS = 65536
+
+MetricKey = Tuple[str, Tuple[Tuple[str, Any], ...]]
+
+
+def _env_enabled() -> bool:
+    return os.environ.get("REPRO_OBS", "1").strip().lower() not in (
+        "0", "false", "off")
+
+
+def _key(name: str, labels: dict) -> MetricKey:
+    return (name, tuple(sorted(labels.items())))
+
+
+class _Hist:
+    """count/sum/min/max summary — bucketless, mergeable, 4 numbers."""
+
+    __slots__ = ("count", "total", "min", "max")
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def add(self, value: float) -> None:
+        self.count += 1
+        self.total += value
+        if value < self.min:
+            self.min = value
+        if value > self.max:
+            self.max = value
+
+
+class _NullSpan:
+    """Shared no-op context manager returned by disabled spans."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    __slots__ = ("_reg", "_name", "_labels", "_t0")
+
+    def __init__(self, reg: "Registry", name: str, labels: dict) -> None:
+        self._reg = reg
+        self._name = name
+        self._labels = labels
+
+    def __enter__(self) -> "_Span":
+        self._t0 = time.perf_counter_ns()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        dur_ns = time.perf_counter_ns() - self._t0
+        self._reg._finish_span(self._name, self._labels, self._t0, dur_ns)
+        return False
+
+
+class Registry:
+    """One process-local metric store. Library code uses the module
+    globals below (`inc`/`set_gauge`/`observe`/`span`); constructing a
+    private `Registry` directly is for tests and the disabled-mode
+    overhead bench."""
+
+    def __init__(self, enabled: bool = True) -> None:
+        self._enabled = bool(enabled)
+        self._lock = threading.Lock()
+        self._counters: Dict[MetricKey, float] = {}
+        self._gauges: Dict[MetricKey, float] = {}
+        self._hists: Dict[MetricKey, _Hist] = {}
+        self._events: List[dict] = []
+        self._dropped_events = 0
+
+    @property
+    def enabled(self) -> bool:
+        return self._enabled
+
+    # -- write side -------------------------------------------------------
+
+    def inc(self, name: str, value: float = 1, **labels) -> None:
+        if not self._enabled:
+            return
+        k = _key(name, labels)
+        with self._lock:
+            self._counters[k] = self._counters.get(k, 0) + value
+
+    def set_gauge(self, name: str, value: float, **labels) -> None:
+        if not self._enabled:
+            return
+        k = _key(name, labels)
+        with self._lock:
+            self._gauges[k] = value
+
+    def observe(self, name: str, value: float, **labels) -> None:
+        if not self._enabled:
+            return
+        k = _key(name, labels)
+        with self._lock:
+            h = self._hists.get(k)
+            if h is None:
+                h = self._hists[k] = _Hist()
+            h.add(value)
+
+    def span(self, name: str, **labels):
+        """Context manager timing its block on the monotonic clock. On
+        exit records a `<name>.ms` histogram observation and buffers a
+        Chrome trace event ("X" phase, microsecond timestamps) carrying
+        `labels` as the event args."""
+        if not self._enabled:
+            return _NULL_SPAN
+        return _Span(self, name, labels)
+
+    def event(self, name: str, ts_us: float, dur_us: float,
+              **labels) -> None:
+        """Buffer an explicit Chrome trace event (e.g. reconstructed
+        from an external timing) without the histogram side effect."""
+        if not self._enabled:
+            return
+        self._push_event(name, labels, ts_us, dur_us)
+
+    def _finish_span(self, name: str, labels: dict, t0_ns: int,
+                     dur_ns: int) -> None:
+        self.observe(f"{name}.ms", dur_ns / 1e6, **labels)
+        self._push_event(name, labels, t0_ns / 1e3, dur_ns / 1e3)
+
+    def _push_event(self, name: str, labels: dict, ts_us: float,
+                    dur_us: float) -> None:
+        ev = {"name": name, "ph": "X", "cat": "repro",
+              "ts": ts_us, "dur": dur_us,
+              "pid": os.getpid(), "tid": threading.get_ident(),
+              "args": dict(labels)}
+        with self._lock:
+            if len(self._events) >= MAX_TRACE_EVENTS:
+                self._dropped_events += 1
+            else:
+                self._events.append(ev)
+
+    # -- read side --------------------------------------------------------
+
+    def counter_total(self, name: str, **match) -> float:
+        """Sum of every counter series named `name` whose labels are a
+        superset of `match` (no kwargs = all series of that name)."""
+        want = set(match.items())
+        with self._lock:
+            return sum(v for (n, lab), v in self._counters.items()
+                       if n == name and want.issubset(lab))
+
+    def hist_stats(self, name: str, **match) -> Optional[dict]:
+        """Merged count/sum/min/max/mean over every histogram series
+        named `name` whose labels contain `match`; None when no series
+        matches."""
+        want = set(match.items())
+        merged = _Hist()
+        with self._lock:
+            for (n, lab), h in self._hists.items():
+                if n == name and want.issubset(lab):
+                    merged.count += h.count
+                    merged.total += h.total
+                    merged.min = min(merged.min, h.min)
+                    merged.max = max(merged.max, h.max)
+        if merged.count == 0:
+            return None
+        return {"count": merged.count, "sum": merged.total,
+                "min": merged.min, "max": merged.max,
+                "mean": merged.total / merged.count}
+
+    def trace_events(self) -> List[dict]:
+        with self._lock:
+            return [dict(ev) for ev in self._events]
+
+    def snapshot(self) -> dict:
+        """JSON-ready state dump (no trace events — those export via
+        `repro.obs.export.chrome_trace`)."""
+        with self._lock:
+            counters = [{"name": n, "labels": dict(lab), "value": v}
+                        for (n, lab), v in sorted(self._counters.items())]
+            gauges = [{"name": n, "labels": dict(lab), "value": v}
+                      for (n, lab), v in sorted(self._gauges.items())]
+            hists = [{"name": n, "labels": dict(lab), "count": h.count,
+                      "sum": h.total, "min": h.min, "max": h.max,
+                      "mean": h.total / h.count}
+                     for (n, lab), h in sorted(self._hists.items())
+                     if h.count]
+            return {"enabled": self._enabled, "counters": counters,
+                    "gauges": gauges, "histograms": hists,
+                    "dropped_trace_events": self._dropped_events}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._hists.clear()
+            self._events.clear()
+            self._dropped_events = 0
+
+
+# -- the process-global registry ------------------------------------------
+
+_REGISTRY = Registry(enabled=_env_enabled())
+
+
+def get_registry() -> Registry:
+    return _REGISTRY
+
+
+def enabled() -> bool:
+    """True unless REPRO_OBS disabled telemetry at import time. Hot
+    call sites with per-record setup cost (string formatting, byte
+    models) should check this first and skip the work entirely."""
+    return _REGISTRY.enabled
+
+
+def inc(name: str, value: float = 1, **labels) -> None:
+    _REGISTRY.inc(name, value, **labels)
+
+
+def set_gauge(name: str, value: float, **labels) -> None:
+    _REGISTRY.set_gauge(name, value, **labels)
+
+
+def observe(name: str, value: float, **labels) -> None:
+    _REGISTRY.observe(name, value, **labels)
+
+
+def span(name: str, **labels):
+    return _REGISTRY.span(name, **labels)
+
+
+def counter_total(name: str, **match) -> float:
+    return _REGISTRY.counter_total(name, **match)
+
+
+def hist_stats(name: str, **match) -> Optional[dict]:
+    return _REGISTRY.hist_stats(name, **match)
+
+
+def reset() -> None:
+    _REGISTRY.reset()

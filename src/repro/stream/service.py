@@ -27,6 +27,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.checkpoint.io import restore_pytree, save_pytree
 from repro.stream.accumulate import ingest_sharded
 from repro.stream.refit import RefitInfo, refit
@@ -104,18 +105,27 @@ class StreamingDsmlService:
 
         Returns the `RefitInfo` when this chunk triggered a refit,
         None otherwise.
+
+        The `stream.ingest` span times the host-side fold DISPATCH
+        (the jitted fold is asynchronous — rows/sec headlines from it
+        are an upper bound on sustained throughput); a triggered refit
+        is timed by its own `stream.refit` span, not this one.
         """
-        if self.window is not None:
-            self.window = window_ingest(self.window, X_batch, y_batch)
-        elif self.mesh is not None:
-            self.state = ingest_sharded(self.state, X_batch, y_batch,
-                                        self.mesh, decay=self.decay,
-                                        data_axis=self.data_axis,
-                                        task_axis=self.task_axis)
-        else:
-            self.state = ingest(self.state, X_batch, y_batch,
-                                decay=self.decay)
-        self._since_refit += X_batch.shape[1]
+        n = int(X_batch.shape[1])
+        with obs.span("stream.ingest"):
+            if self.window is not None:
+                self.window = window_ingest(self.window, X_batch, y_batch)
+            elif self.mesh is not None:
+                self.state = ingest_sharded(self.state, X_batch, y_batch,
+                                            self.mesh, decay=self.decay,
+                                            data_axis=self.data_axis,
+                                            task_axis=self.task_axis)
+            else:
+                self.state = ingest(self.state, X_batch, y_batch,
+                                    decay=self.decay)
+        obs.inc("stream.ingest.chunks")
+        obs.inc("stream.ingest.rows", self.m * n)
+        self._since_refit += n
         if self._since_refit >= self._interval:
             return self.refit()
         return None
@@ -123,24 +133,36 @@ class StreamingDsmlService:
     # -- refit policy -----------------------------------------------------
 
     def refit(self) -> RefitInfo:
-        """Force a DSML refresh now and adapt the refit cadence."""
-        if self.window is not None and int(self.window.seen) > 0:
-            # an empty ring buffer (fresh service, or state restored
-            # without its window) must not wipe the stats with zeros
-            Sigmas, cs, counts = window_stats(self.window)
-            self.state = self.state._replace(Sigmas=Sigmas, cs=cs,
-                                             counts=counts)
-        warm = int(self.state.generation) > 0
-        l_iters = self.warm_lasso_iters if warm else self.lasso_iters
-        d_iters = self.warm_debias_iters if warm else self.debias_iters
-        self.state, info = refit(self.state, self.lam, self.mu, self.Lam,
-                                 lasso_iters=l_iters,
-                                 debias_iters=d_iters, warm=warm)
-        drift = 1.0 - float(info.jaccard)
-        if warm and drift <= self.drift_threshold:
-            self._interval = min(2 * self._interval, self.max_refit_interval)
-        else:
-            self._interval = self.refit_every
+        """Force a DSML refresh now and adapt the refit cadence.
+
+        The `stream.refit` span is TRUE latency (unlike the async
+        ingest span): the drift read forces `float(info.jaccard)`,
+        which blocks on the refreshed model inside the span.
+        """
+        with obs.span("stream.refit"):
+            if self.window is not None and int(self.window.seen) > 0:
+                # an empty ring buffer (fresh service, or state restored
+                # without its window) must not wipe the stats with zeros
+                Sigmas, cs, counts = window_stats(self.window)
+                self.state = self.state._replace(Sigmas=Sigmas, cs=cs,
+                                                 counts=counts)
+            warm = int(self.state.generation) > 0
+            l_iters = self.warm_lasso_iters if warm else self.lasso_iters
+            d_iters = self.warm_debias_iters if warm else self.debias_iters
+            self.state, info = refit(self.state, self.lam, self.mu,
+                                     self.Lam, lasso_iters=l_iters,
+                                     debias_iters=d_iters, warm=warm)
+            drift = 1.0 - float(info.jaccard)
+            if warm and drift <= self.drift_threshold:
+                self._interval = min(2 * self._interval,
+                                     self.max_refit_interval)
+            else:
+                self._interval = self.refit_every
+        obs.inc("stream.refit.count")
+        obs.observe("stream.refit.jaccard", float(info.jaccard))
+        obs.observe("stream.refit.support_size", float(info.support_size))
+        obs.set_gauge("stream.generation", int(info.generation))
+        obs.set_gauge("stream.refit.interval_samples", self._interval)
         self._since_refit = 0
         self.last_info = info
         return info
@@ -152,10 +174,19 @@ class StreamingDsmlService:
 
         X (m, n, p) gives per-task designs -> (m, n); X (n, p) is one
         shared design scored by every task's estimate -> (m, n).
+
+        The `stream.predict` span times the host-side dispatch (the
+        jitted matmul is asynchronous), which is the admission latency
+        a serving front would see.
         """
-        if X.ndim == 2:
-            return _predict_shared(self.state.beta_tilde, X)
-        return _predict_tasks(self.state.beta_tilde, X)
+        with obs.span("stream.predict"):
+            if X.ndim == 2:
+                out = _predict_shared(self.state.beta_tilde, X)
+            else:
+                out = _predict_tasks(self.state.beta_tilde, X)
+        obs.inc("stream.predict.requests")
+        obs.inc("stream.predict.rows", int(X.shape[-2]))
+        return out
 
     @property
     def generation(self) -> int:

@@ -1,0 +1,21 @@
+"""Known-bad fixture: RL108 — repro.obs telemetry calls inside
+jit-reachable code (they'd record per-compilation, not per-call)."""
+import jax
+
+from repro import obs
+
+
+def _accumulate(x):
+    with obs.span("fixture.step"):   # RL108: reachable from jit root
+        return x + 1.0
+
+
+@jax.jit
+def fused_step(x):
+    obs.inc("fixture.calls")         # RL108: directly inside a jit root
+    return _accumulate(x)
+
+
+def report(x):
+    obs.inc("fixture.reports")       # eager, never jit-reached: MUST NOT fire
+    return x

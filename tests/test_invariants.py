@@ -67,7 +67,7 @@ def test_cache_cli_never_imports_jax():
 
 def test_every_code_documented():
     assert all(code.startswith("RL") for code in CODES)
-    for findings_source in ("RL101", "RL105", "RL107", "RL201",
+    for findings_source in ("RL101", "RL105", "RL107", "RL108", "RL201",
                             "RL210", "RL212", "RL301", "RL303"):
         assert findings_source in CODES
 
@@ -100,6 +100,16 @@ def test_fixture_tracer_hazard():
     f = lint_file(FIXTURES / "bad_tracer_hazard.py")
     assert codes(f) == ["RL107"]
     assert len(f) == 2          # `if g > 0` and `float(g)`
+
+
+def test_fixture_obs_in_jit():
+    f = lint_file(FIXTURES / "bad_obs_in_jit.py")
+    assert codes(f) == ["RL108"]
+    # the jit root's inc + the reachable helper's span context manager;
+    # the eager report() inc must NOT fire
+    assert len(f) == 2
+    assert not any("fixture.reports" in x.message or "'report'" in x.message
+                   for x in f)
 
 
 # --- Engine 2 geometry fixture -------------------------------------------

@@ -201,15 +201,15 @@ def check_logistic_contract() -> List[Finding]:
     for n in GRID_N:
         for p in GRID_P:
             for block in LOGISTIC_BLOCKS:
-                routed, bn, bp = _route_and_resolve(n, p, block)
-                if routed != routes_to_oracle(n, p, block) or \
-                        (bn, bp) != resolve_logistic_blocks(n, p, block):
+                reason, bn, bp = _route_and_resolve(n, p, block)
+                if (reason is not None) != routes_to_oracle(n, p, block) \
+                        or (bn, bp) != resolve_logistic_blocks(n, p, block):
                     findings.append(Finding(
                         rel, 0, "RL212",
                         f"routes_to_oracle/resolve_logistic_blocks "
                         f"disagree with _route_and_resolve at "
                         f"(n={n}, p={p}, block={block})"))
-                if routed:
+                if reason is not None:
                     continue
                 if not (_aligned_divisor(n, bn)
                         and _aligned_divisor(p, bp)):

@@ -37,6 +37,9 @@ CODES = {
     "RL106": "jax.config mutated outside the approved allowlist",
     "RL107": "tracer hazard: Python cast/branch on a traced value in "
              "jit-reachable code",
+    "RL108": "repro.obs counter/span call in jit-reachable code — "
+             "telemetry must record eagerly or via the "
+             "common.record_route funnel",
     # Engine 2 — static tiling/VMEM contract checks (contracts.py)
     "RL201": "BlockSpec index_map arity disagrees with its pallas_call grid",
     "RL202": "BlockSpec tile parameter lacks a divisibility assert in its "

@@ -337,6 +337,22 @@ def _mentions_traced(mod: ModuleLint, expr: ast.AST,
     return False
 
 
+def _jit_reachable(mod: ModuleLint, fns: Dict[str, ast.FunctionDef],
+                   calls: Dict[str, Set[str]]) -> Set[str]:
+    """Module-local functions reachable from a jit entry point
+    (decorator or direct `jax.jit(f)`) via the intra-module call graph
+    — the shared reachability core of RL107 and RL108."""
+    reachable: Set[str] = set()
+    stack = list(_jit_roots(mod, fns))
+    while stack:
+        name = stack.pop()
+        if name in reachable:
+            continue
+        reachable.add(name)
+        stack.extend(c for c in calls.get(name, ()) if c in fns)
+    return reachable
+
+
 def check_tracer_hazards(mod: ModuleLint) -> None:
     """Inside functions reachable from a jit entry point (decorator or
     direct `jax.jit(f)`), flag the targeted hazard patterns: `.item()`,
@@ -347,16 +363,7 @@ def check_tracer_hazards(mod: ModuleLint) -> None:
     fns = {n.name: n for n in mod.tree.body
            if isinstance(n, ast.FunctionDef)}
     calls = {name: _call_names(fn) for name, fn in fns.items()}
-    reachable: Set[str] = set()
-    stack = list(_jit_roots(mod, fns))
-    while stack:
-        name = stack.pop()
-        if name in reachable:
-            continue
-        reachable.add(name)
-        stack.extend(c for c in calls.get(name, ()) if c in fns)
-
-    for name in reachable:
+    for name in _jit_reachable(mod, fns, calls):
         fn = fns[name]
         traced = _traced_locals(mod, fn)
         for node in ast.walk(fn):
@@ -381,6 +388,37 @@ def check_tracer_hazards(mod: ModuleLint) -> None:
                          f"lax.while_loop")
 
 
+# --- telemetry in traced code (RL108) ------------------------------------
+
+OBS_MODULE = "repro.obs"
+
+
+def check_obs_in_jit(mod: ModuleLint) -> None:
+    """`repro.obs` counter/span calls must never sit in jit-reachable
+    code: under trace they would fire once per COMPILATION (silently
+    under-counting every cached re-execution), and a span would time
+    tracing, not the computation. Reuses RL107's jit-root reachability.
+    Record eagerly from a non-jitted wrapper guarded by
+    `jax.core.trace_state_clean()` (the engine pattern), or route
+    trace-time decisions through `kernels.common.record_route` — the
+    one audited funnel, whose counters are documented as
+    per-compilation."""
+    fns = {n.name: n for n in mod.tree.body
+           if isinstance(n, ast.FunctionDef)}
+    calls = {name: _call_names(fn) for name, fn in fns.items()}
+    for name in _jit_reachable(mod, fns, calls):
+        for node in ast.walk(fns[name]):
+            if not isinstance(node, ast.Call):
+                continue
+            cname = mod.canonical(node.func)
+            if cname == OBS_MODULE \
+                    or (cname and cname.startswith(OBS_MODULE + ".")):
+                mod.flag(node, "RL108",
+                         f"'{cname}' called in jit-reachable '{name}' — "
+                         f"record eagerly (trace_state_clean-guarded "
+                         f"wrapper) or via kernels.common.record_route")
+
+
 # --- driver --------------------------------------------------------------
 
 ALL_CHECKS = (
@@ -389,6 +427,7 @@ ALL_CHECKS = (
     check_autotune_keys,
     check_config_mutation,
     check_tracer_hazards,
+    check_obs_in_jit,
 )
 
 
