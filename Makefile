@@ -3,16 +3,18 @@ PY ?= python
 # benchmarks.paper_common)
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
-.PHONY: test test-stats test-cpu8 lint bench-smoke bench-json \
+.PHONY: test test-stats test-cpu8 test-chaos lint bench-smoke bench-json \
 	check-regression bench-stream-smoke smoke-examples obs-report
 
 # default flow: the static-analysis pass first (fails in seconds, before
 # any kernel test runs), then the full pytest suite (which includes the
-# statistical tier below) plus the perf-floor gate on the committed
-# bench JSON
+# statistical and chaos tiers below) plus the perf-floor +
+# guarded-ingest-overhead gate on the committed bench JSON, then the
+# seeded chaos schedule end to end
 test: lint
 	$(PY) -m pytest -q
 	$(PY) benchmarks/check_regression.py
+	$(PY) tools/chaos.py
 
 # repo-native invariant linter + static Pallas tiling/VMEM contract
 # checker (DESIGN.md section 13 for the RLxxx codes). The --cache leg
@@ -28,6 +30,13 @@ lint:
 test-stats:
 	$(PY) -m pytest -q tests/test_statistical_recovery.py \
 	    tests/test_figures_smoke.py
+
+# resilience tier alone: the fault-injection suite (poisoned batches,
+# forced refit divergence, torn checkpoints, SIGKILL mid-ingest) plus
+# the seeded end-to-end chaos schedule from tools/chaos.py
+test-chaos:
+	$(PY) -m pytest -q tests/test_chaos.py
+	$(PY) tools/chaos.py
 
 # sharded DSML / SPMD paths with 8 forced host devices (the in-test
 # subprocess probes force their own device count; this job exercises the

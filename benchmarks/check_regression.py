@@ -111,6 +111,55 @@ def check_obs_overhead(current: str, budget: float = 0.02) -> list:
     return failures
 
 
+def check_guard_overhead(budget: float = 0.02) -> list:
+    """Gate guarded ingest at < `budget` (2%) over the unguarded fold.
+
+    Times the same ingest stream through two services — `guard=False`
+    vs the default `IngestGuard` — with a `block_until_ready` per chunk
+    on BOTH paths, so the async fold dispatch cannot hide (or fake) the
+    guard's per-chunk device sync. The probe is O(m·n·p) in front of an
+    O(m·n·p²) fold (~1/p relative), so at serving shapes the budget has
+    an order of magnitude of headroom; the gate exists to catch the
+    probe growing a second dispatch or a host-side recompute. Best of 3
+    paired repeats damps CPU timer noise.
+    """
+    import time
+    try:
+        import jax
+        import numpy as np
+        from repro.stream import StreamingDsmlService
+    except ImportError:
+        print("skip guard_overhead: jax/repro not importable "
+              "(run with PYTHONPATH=src)")
+        return []
+    m, n, p, iters = 4, 512, 256, 20
+    rng = np.random.default_rng(0)
+    X = jax.numpy.asarray(rng.standard_normal((m, n, p)),
+                          jax.numpy.float32)
+    y = jax.numpy.asarray(rng.standard_normal((m, n)), jax.numpy.float32)
+
+    def run(guard) -> float:
+        svc = StreamingDsmlService(m, p, lam=0.4, mu=0.2, Lam=1.0,
+                                   refit_every=10**9, guard=guard,
+                                   refit_health_checks=False)
+        for _ in range(3):      # warm the jit caches outside the clock
+            svc.ingest(X, y)
+            jax.block_until_ready(svc.state.Sigmas)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            svc.ingest(X, y)
+            jax.block_until_ready(svc.state.Sigmas)
+        return time.perf_counter() - t0
+
+    frac = min(run(True) / run(False) for _ in range(3)) - 1.0
+    if frac > budget:
+        return [f"guard_overhead: guarded ingest is {frac:+.1%} vs "
+                f"unguarded (> {budget:.0%}) at (m={m}, n={n}, p={p})"]
+    print(f"ok guard_overhead: {frac:+.1%} vs unguarded "
+          f"(budget {budget:.0%}) at (m={m}, n={n}, p={p})")
+    return []
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--current", default="BENCH_kernels.json")
@@ -140,6 +189,7 @@ def main() -> int:
                         f"baseline {base[name]:.2f}x (< {args.max_drop})")
 
     failures.extend(check_obs_overhead(args.current))
+    failures.extend(check_guard_overhead())
 
     for f in failures:
         print(f"REGRESSION {f}", file=sys.stderr)

@@ -47,7 +47,7 @@ def run_metadata() -> dict:
             capture_output=True, text=True, timeout=10,
             cwd=__file__.rsplit("/", 2)[0] or ".",
         ).stdout.strip() or "unknown"
-    except Exception:
+    except (OSError, subprocess.SubprocessError):
         sha = "unknown"
     return {
         "backend": jax.default_backend(),

@@ -3,6 +3,15 @@
 Leaves are saved flat by tree path; restore maps them back onto a
 template pytree (shape/dtype checked). Works for TrainState, params and
 serving caches alike.
+
+Crash safety (DESIGN.md §15): `save_pytree` never writes the target
+file in place. The payload lands in a same-directory temp file that is
+flushed, fsynced, and `os.replace`d over the destination, so a process
+killed mid-save leaves either the previous complete checkpoint or a
+stray `*.tmp.*` file — never a torn npz that bricks restart. Torn or
+otherwise unreadable files surface as `CheckpointError` (a `ValueError`
+subclass) with the path named, as do template mismatches — the cryptic
+`BadZipFile` / npz key errors that used to escape are wrapped.
 """
 from __future__ import annotations
 
@@ -10,6 +19,10 @@ import os
 
 import jax
 import numpy as np
+
+
+class CheckpointError(ValueError):
+    """A checkpoint file is unreadable or does not match its template."""
 
 
 def _flatten_with_names(tree):
@@ -26,21 +39,75 @@ def _flatten_with_names(tree):
     return out
 
 
-def save_pytree(path: str, tree) -> None:
+def npz_safe_dtype(dtype) -> np.dtype:
+    """The on-disk dtype a leaf of `dtype` lands as — mirrors the
+    bf16 -> f32 upcast `save_pytree` applies (restore casts back), so
+    compatibility validators compare against what is actually saved."""
+    arr = np.asarray(jax.numpy.zeros((), dtype))
+    if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+        return np.dtype(np.float32)
+    return arr.dtype
+
+
+def atomic_write(path: str, write_fn) -> None:
+    """Write `path` atomically: `write_fn(file_obj)` fills a
+    same-directory temp file, which is flushed + fsynced and renamed
+    over the destination. On failure the temp file is removed and the
+    previous `path` contents (if any) are untouched."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path if path.endswith(".npz") else path + ".npz",
-             **_flatten_with_names(tree))
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
+
+
+def save_pytree(path: str, tree) -> None:
+    fname = path if path.endswith(".npz") else path + ".npz"
+    flat = _flatten_with_names(tree)
+    atomic_write(fname, lambda f: np.savez(f, **flat))
+
+
+def load_npz(path: str):
+    """`np.load` with torn/corrupt files surfaced as CheckpointError."""
+    fname = path if path.endswith(".npz") else path + ".npz"
+    try:
+        return np.load(fname)
+    except FileNotFoundError:
+        raise
+    except Exception as e:
+        raise CheckpointError(
+            f"checkpoint '{fname}' is unreadable (torn write or "
+            f"corruption): {type(e).__name__}: {e}") from e
 
 
 def restore_pytree(path: str, template):
-    """Restore into the structure of `template` (shape/dtype validated)."""
+    """Restore into the structure of `template` (shape/dtype validated).
+
+    Raises `CheckpointError` naming the file and the offending leaves
+    when the checkpoint is torn, was saved from a different structure
+    (missing leaves), or carries mismatched shapes. Extra keys on disk
+    are legal (a template may restore a subset), but are reported
+    alongside missing-leaf errors since together they usually mean
+    "wrong checkpoint for this template".
+    """
     fname = path if path.endswith(".npz") else path + ".npz"
-    data = np.load(fname)
+    data = load_npz(fname)
     named = _flatten_with_names(template)
     missing = [k for k in named if k not in data.files]
     if missing:
-        raise KeyError(f"checkpoint missing {len(missing)} leaves, "
-                       f"e.g. {missing[:3]}")
+        extra = [k for k in data.files if k not in named]
+        hint = f"; file has {len(extra)} unexpected keys e.g. {extra[:3]}" \
+            if extra else ""
+        raise CheckpointError(
+            f"checkpoint '{fname}' does not match the restore template: "
+            f"{len(missing)} leaves missing, e.g. {missing[:3]}{hint}")
     leaves, treedef = jax.tree_util.tree_flatten(template)
     flat = jax.tree_util.tree_flatten_with_path(template)[0]
     new_leaves = []
@@ -50,6 +117,8 @@ def restore_pytree(path: str, template):
             for k in pth)
         arr = data[key]
         if arr.shape != leaf.shape:
-            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+            raise CheckpointError(
+                f"checkpoint '{fname}' leaf '{key}': shape {arr.shape} "
+                f"!= template {leaf.shape}")
         new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, new_leaves)

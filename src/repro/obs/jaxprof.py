@@ -18,7 +18,7 @@ def profiler_trace(log_dir: str, **kwargs):
     """Wrap a block in `jax.profiler.trace(log_dir)`; degrades to a
     no-op (with a registry counter marking the skip) when jax is not
     importable, so callers never need their own try/except."""
-    from . import registry as _registry
+    from repro.obs import registry as _registry
     try:
         import jax
     except Exception:

@@ -9,6 +9,8 @@ warm starts. `StreamingDsmlService` is the serving driver. DESIGN.md §9.
 from repro.stream.accumulate import (
     accumulate_stats_fn, accumulate_stats_sharded, ingest_sharded,
 )
+from repro.stream.guard import IngestGuard, QuarantineRecord
+from repro.stream.health import RefitHealth, refit_health
 from repro.stream.refit import (
     RefitInfo, jaccard_support, refit, refit_logistic,
 )
@@ -20,6 +22,8 @@ from repro.stream.state import (
 
 __all__ = [
     "accumulate_stats_fn", "accumulate_stats_sharded", "ingest_sharded",
+    "IngestGuard", "QuarantineRecord",
+    "RefitHealth", "refit_health",
     "RefitInfo", "jaccard_support", "refit", "refit_logistic",
     "StreamingDsmlService",
     "StreamState", "WindowState", "ingest", "ingest_stats",

@@ -1,0 +1,87 @@
+"""Post-refit invariant checks: is a refreshed model fit to serve?
+
+A refit that diverged — a warm start gone stale after a regime shift,
+an escalated lambda interacting badly with a short iteration budget —
+must never silently replace a good `beta_tilde`. `refit_health` runs
+three invariants on a *candidate* state before the service adopts it
+(DESIGN.md §15 documents the rollback state machine around it):
+
+* **finiteness** — `beta_local`, `Ms`, `beta_u`, `beta_tilde` all
+  finite (a single NaN anywhere condemns the candidate);
+* **support sanity** — `|S_hat| <= max_support` when a ceiling is
+  configured (a full support on a sparse workload is a classic
+  divergence signature);
+* **KKT residual** — the engine's own prox-gradient fixed-point
+  residual (the quantity `tol=`/`return_iters` early exit checks,
+  here evaluated once post-hoc in the eq.-2 convention `refit` solves
+  under) must sit under a ceiling. A NaN residual fails the check
+  (the comparison is `not (kkt <= ceiling)`), so divergence cannot
+  hide behind NaN-poisoned comparisons.
+
+All checks run eagerly on the host (one jitted reduction, three
+scalars pulled) — this module is never jit-reachable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import power_iteration_batched
+from repro.kernels.ista_step.ref import ista_step_batched_ref
+from repro.stream.state import StreamState
+
+
+class RefitHealth(NamedTuple):
+    healthy: bool
+    reason: Optional[str]    # None | "nonfinite_model" | "support_size"
+                             # | "kkt_residual"
+    kkt_residual: float      # prox-gradient residual of beta_local
+    support_size: int        # |S_hat| of the candidate
+
+
+@jax.jit
+def _model_health(Sigmas, cs, beta_local, Ms, beta_u, beta_tilde, lam):
+    """[all_finite, kkt_residual] as a (2,) f32.
+
+    The residual replicates `solve_lasso_eq2`'s convention: step sizes
+    2/max(2*lam_max, eps) and threshold weight lam/2, so a candidate
+    that satisfies the eq.-2 optimality condition has residual ~0
+    regardless of how many iterations the refit actually ran.
+    """
+    finite = (jnp.isfinite(beta_local).all() & jnp.isfinite(Ms).all()
+              & jnp.isfinite(beta_u).all() & jnp.isfinite(beta_tilde).all())
+    lam_max = power_iteration_batched(Sigmas)
+    etas = 2.0 / jnp.maximum(2.0 * lam_max, 1e-12)
+    B = beta_local[..., None]
+    B_fp = ista_step_batched_ref(Sigmas, jnp.nan_to_num(B), cs[..., None],
+                                 etas, 0.5 * jnp.asarray(lam))
+    kkt = jnp.max(jnp.abs(B_fp - jnp.nan_to_num(B)))
+    return jnp.stack([finite.astype(jnp.float32), kkt.astype(jnp.float32)])
+
+
+def refit_health(candidate: StreamState, lam, *,
+                 kkt_ceiling: float = 1.0,
+                 max_support: Optional[int] = None) -> RefitHealth:
+    """Judge a candidate refit against the serve-fitness invariants.
+
+    `kkt_ceiling` bounds the eq.-2 prox-gradient residual of the
+    candidate's `beta_local` on the candidate's own statistics: a
+    converged-ish refit on standardized traffic sits orders of
+    magnitude below 1.0, while a diverged one is non-finite or huge.
+    `max_support=None` disables the support ceiling.
+    """
+    stats = np.asarray(_model_health(
+        candidate.Sigmas, candidate.cs, candidate.beta_local, candidate.Ms,
+        candidate.beta_u, candidate.beta_tilde, lam))
+    finite, kkt = bool(stats[0]), float(stats[1])
+    support_size = int(np.asarray(jnp.sum(candidate.support)))
+    if not finite:
+        return RefitHealth(False, "nonfinite_model", kkt, support_size)
+    if max_support is not None and support_size > max_support:
+        return RefitHealth(False, "support_size", kkt, support_size)
+    if not (kkt <= kkt_ceiling):     # NaN residual must fail, not pass
+        return RefitHealth(False, "kkt_residual", kkt, support_size)
+    return RefitHealth(True, None, kkt, support_size)

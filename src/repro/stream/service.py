@@ -5,20 +5,36 @@ Ties the streaming pieces together around one `StreamState`:
     ingest loop     raw minibatches fold into the state (host path,
                     decayed, sliding-window, or SPMD over a data x task
                     mesh via `stream.accumulate`);
+    guarded ingest  an `IngestGuard` in front of the fold quarantines
+                    non-finite / magnitude-outlier chunks BEFORE they
+                    can poison the irreversible `(Sigma, c)` statistics
+                    (`stream/guard.py`; pass `guard=False` to opt out);
     refit policy    a refit runs every `refit_every` ingested samples;
                     when the refreshed support has not drifted
                     (jaccard >= 1 - drift_threshold) the interval
                     doubles, up to `max_refit_interval` — stationary
                     traffic converges to rare refits, a support shift
                     snaps the cadence back to the base rate;
+    refit health    every candidate refit passes the `stream/health.py`
+                    invariants (finite model, support sanity, KKT
+                    residual ceiling) before it is adopted; a failing
+                    candidate is ROLLED BACK — the service keeps
+                    serving the last good generation, the retry waits
+                    out a capped exponential backoff and runs with an
+                    escalated iteration budget (DESIGN.md §15);
     warm starts     generation-0 refits run the full cold budget,
                     later ones warm-start both solves (lasso from
                     `beta_local`, debias from `Ms`) with the
                     `warm_*_iters` budgets (default: a quarter);
-    serving         `predict` applies the current `beta_tilde`;
+    serving         `predict` applies the current `beta_tilde` (always
+                    the last HEALTHY generation);
     persistence     `save`/`load` round-trip the state through
-                    `checkpoint/io` (npz), so a restarted service
-                    resumes serving and refitting without replay.
+                    `checkpoint/io` (atomic npz; `load` validates
+                    (m, p, dtype) compatibility before touching live
+                    state), and `ckpt_dir=` upgrades persistence to the
+                    crash-safe `CheckpointStore` — checksummed
+                    manifest, retained generations, `restore()`
+                    falling back past a corrupted head.
 """
 from __future__ import annotations
 
@@ -26,15 +42,26 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import obs
-from repro.checkpoint.io import restore_pytree, save_pytree
+from repro.checkpoint.io import (
+    CheckpointError, load_npz, npz_safe_dtype, restore_pytree, save_pytree,
+)
+from repro.checkpoint.manifest import CheckpointStore
 from repro.stream.accumulate import ingest_sharded
-from repro.stream.refit import RefitInfo, refit
+from repro.stream.guard import IngestGuard, _guarded_fold
+from repro.stream.health import RefitHealth, refit_health
+from repro.stream.refit import RefitInfo, jaccard_support, refit
 from repro.stream.state import (
     StreamState, init_stream_state, init_window, ingest, window_ingest,
     window_stats,
 )
+
+# consecutive-failure escalation of the retry iteration budget is
+# capped: past 2 failures more iterations stop being the cure and the
+# backoff (waiting for more data) carries the recovery instead
+MAX_ITER_ESCALATION = 4
 
 
 @jax.jit
@@ -62,6 +89,13 @@ class StreamingDsmlService:
                  warm_lasso_iters: Optional[int] = None,
                  warm_debias_iters: Optional[int] = None,
                  chunk_n: Optional[int] = None,
+                 guard=True,
+                 refit_health_checks: bool = True,
+                 refit_kkt_ceiling: float = 1.0,
+                 max_support: Optional[int] = None,
+                 ckpt_dir: Optional[str] = None,
+                 ckpt_keep: int = 3,
+                 checkpoint_on_refit: bool = True,
                  mesh=None, data_axis: str = "data",
                  task_axis: str = "task"):
         if window is not None and mesh is not None:
@@ -72,6 +106,7 @@ class StreamingDsmlService:
                              "schemes; the window path aggregates its "
                              "chunks unweighted, so pass one or the other")
         self.m, self.p = m, p
+        self.dtype = dtype
         self.lam, self.mu, self.Lam = lam, mu, Lam
         self.decay = float(decay)
         self.lasso_iters = lasso_iters
@@ -84,6 +119,20 @@ class StreamingDsmlService:
         self.drift_threshold = float(drift_threshold)
         self.max_refit_interval = max_refit_interval \
             if max_refit_interval is not None else 16 * refit_every
+        # guarded ingest: True -> default gate, False/None -> off, or an
+        # IngestGuard instance for tuned thresholds
+        if guard is True:
+            self.guard: Optional[IngestGuard] = IngestGuard()
+        elif guard is False or guard is None:
+            self.guard = None
+        else:
+            self.guard = guard
+        self.refit_health_checks = refit_health_checks
+        self.refit_kkt_ceiling = float(refit_kkt_ceiling)
+        self.max_support = max_support
+        self.ckpt_store = CheckpointStore(ckpt_dir, keep=ckpt_keep) \
+            if ckpt_dir is not None else None
+        self.checkpoint_on_refit = checkpoint_on_refit
         self.mesh, self.data_axis, self.task_axis = mesh, data_axis, task_axis
         # warm the kernel block-size cache for this workload's solve
         # shapes — and, when the expected chunk rows `chunk_n` are
@@ -95,7 +144,14 @@ class StreamingDsmlService:
         self.window = init_window(window, m, p, dtype) if window else None
         self._interval = refit_every
         self._since_refit = 0
+        self._refit_failures = 0     # consecutive rejected candidates
+        self.rollbacks = 0           # total rejected candidates, ever
         self.last_info: Optional[RefitInfo] = None
+        self.last_health: Optional[RefitHealth] = None
+        # injectable refit seam: the fault-injection harness
+        # (repro.testing.faults) swaps this to script divergence; the
+        # production path never touches it
+        self._refit_impl = refit
 
     # -- ingestion --------------------------------------------------------
 
@@ -103,17 +159,43 @@ class StreamingDsmlService:
                y_batch: jnp.ndarray) -> Optional[RefitInfo]:
         """Fold one (m, n, p)/(m, n) minibatch in; maybe refit.
 
-        Returns the `RefitInfo` when this chunk triggered a refit,
-        None otherwise.
+        Returns the `RefitInfo` when this chunk triggered a refit
+        attempt, None otherwise (including when the guard quarantined
+        the chunk — a rejected chunk neither folds nor advances the
+        refit cadence, so `(Sigma, c)` stay bitwise unchanged).
 
         The `stream.ingest` span times the host-side fold DISPATCH
         (the jitted fold is asynchronous — rows/sec headlines from it
         are an upper bound on sustained throughput); a triggered refit
         is timed by its own `stream.refit` span, not this one.
         """
+        # dense host path: probe fused into the fold dispatch (one
+        # launch, one sync — the <2% overhead contract); window/sharded
+        # paths — and a guard with an absolute max_abs ceiling, which
+        # the fused statistics-derived probe cannot evaluate — probe
+        # standalone in front of their folds
+        fused = (self.guard is not None and self.window is None
+                 and self.mesh is None and self.guard.max_abs is None)
+        if self.guard is not None and not fused:
+            ok, _reason = self.guard.admit(X_batch, y_batch)
+            if not ok:
+                obs.inc("stream.ingest.quarantined_chunks")
+                return None
         n = int(X_batch.shape[1])
         with obs.span("stream.ingest"):
-            if self.window is not None:
+            if fused:
+                folded, health = _guarded_fold(
+                    self.state, X_batch, y_batch, self.decay)
+                ok, _reason = self.guard.record(
+                    np.asarray(health),
+                    tuple(int(s) for s in X_batch.shape))
+                if not ok:
+                    # the speculative fold is discarded unassigned:
+                    # (Sigma, c) stay bitwise the pre-chunk arrays
+                    obs.inc("stream.ingest.quarantined_chunks")
+                    return None
+                self.state = folded
+            elif self.window is not None:
                 self.window = window_ingest(self.window, X_batch, y_batch)
             elif self.mesh is not None:
                 self.state = ingest_sharded(self.state, X_batch, y_batch,
@@ -133,11 +215,21 @@ class StreamingDsmlService:
     # -- refit policy -----------------------------------------------------
 
     def refit(self) -> RefitInfo:
-        """Force a DSML refresh now and adapt the refit cadence.
+        """Attempt a DSML refresh now; adopt it only if healthy.
+
+        A healthy candidate advances the generation and adapts the
+        cadence exactly as before. An UNHEALTHY candidate (non-finite
+        model, oversized support, KKT residual past the ceiling) is
+        discarded: the service keeps serving the last good generation,
+        the next attempt waits out a capped exponential backoff
+        (base_interval * 2^failures, capped at `max_refit_interval`)
+        and runs with an escalated iteration budget (cold budgets x
+        2^failures, capped at x4). The returned `RefitInfo` then
+        describes the KEPT state (unchanged generation, jaccard 1.0).
 
         The `stream.refit` span is TRUE latency (unlike the async
-        ingest span): the drift read forces `float(info.jaccard)`,
-        which blocks on the refreshed model inside the span.
+        ingest span): the health verdict and drift read block on the
+        refreshed model inside the span.
         """
         with obs.span("stream.refit"):
             if self.window is not None and int(self.window.seen) > 0:
@@ -147,23 +239,66 @@ class StreamingDsmlService:
                 self.state = self.state._replace(Sigmas=Sigmas, cs=cs,
                                                  counts=counts)
             warm = int(self.state.generation) > 0
-            l_iters = self.warm_lasso_iters if warm else self.lasso_iters
-            d_iters = self.warm_debias_iters if warm else self.debias_iters
-            self.state, info = refit(self.state, self.lam, self.mu,
-                                     self.Lam, lasso_iters=l_iters,
-                                     debias_iters=d_iters, warm=warm)
+            if self._refit_failures == 0:
+                l_iters = self.warm_lasso_iters if warm else self.lasso_iters
+                d_iters = self.warm_debias_iters if warm \
+                    else self.debias_iters
+            else:
+                # retry after rollback: escalated budget, warm-started
+                # from the last GOOD generation (the rejected candidate
+                # never touched the state)
+                esc = min(2 ** self._refit_failures, MAX_ITER_ESCALATION)
+                l_iters = self.lasso_iters * esc
+                d_iters = self.debias_iters * esc
+            candidate, info = self._refit_impl(
+                self.state, self.lam, self.mu, self.Lam,
+                lasso_iters=l_iters, debias_iters=d_iters, warm=warm)
+            if self.refit_health_checks:
+                health = refit_health(candidate, self.lam,
+                                      kkt_ceiling=self.refit_kkt_ceiling,
+                                      max_support=self.max_support)
+            else:
+                health = RefitHealth(True, None, float("nan"), -1)
+            self.last_health = health
+            if not health.healthy:
+                return self._rollback(health)
+            self.state = candidate
             drift = 1.0 - float(info.jaccard)
-            if warm and drift <= self.drift_threshold:
+            if warm and self._refit_failures == 0 \
+                    and drift <= self.drift_threshold:
                 self._interval = min(2 * self._interval,
                                      self.max_refit_interval)
             else:
                 self._interval = self.refit_every
+            self._refit_failures = 0
         obs.inc("stream.refit.count")
         obs.observe("stream.refit.jaccard", float(info.jaccard))
         obs.observe("stream.refit.support_size", float(info.support_size))
+        obs.observe("stream.refit.kkt_residual", health.kkt_residual)
         obs.set_gauge("stream.generation", int(info.generation))
         obs.set_gauge("stream.refit.interval_samples", self._interval)
+        obs.set_gauge("stream.refit.failures", 0)
         self._since_refit = 0
+        self.last_info = info
+        if self.ckpt_store is not None and self.checkpoint_on_refit:
+            self.checkpoint()
+        return info
+
+    def _rollback(self, health: RefitHealth) -> RefitInfo:
+        """Discard an unhealthy candidate; keep serving the last good
+        generation and schedule the escalated retry."""
+        self._refit_failures += 1
+        self.rollbacks += 1
+        self._interval = min(self.refit_every * 2 ** self._refit_failures,
+                             self.max_refit_interval)
+        self._since_refit = 0
+        obs.inc("stream.refit.rejected", reason=health.reason)
+        obs.set_gauge("stream.refit.failures", self._refit_failures)
+        obs.set_gauge("stream.refit.interval_samples", self._interval)
+        info = RefitInfo(
+            jaccard=jnp.asarray(1.0, self.state.cs.dtype),
+            support_size=jnp.sum(self.state.support).astype(jnp.int32),
+            generation=self.state.generation)
         self.last_info = info
         return info
 
@@ -207,23 +342,76 @@ class StreamingDsmlService:
         return {"state": self.state}
 
     def save(self, path: str) -> None:
+        """Atomic single-file snapshot (tmp + fsync + rename); see
+        `checkpoint()` for the retained-generation store."""
         save_pytree(path, self._ckpt_tree())
 
+    def _validate_ckpt_compat(self, data, where: str) -> None:
+        """Reject a checkpoint that was not produced by a service of
+        this (m, p, dtype) BEFORE any live state is overwritten."""
+        key = "state/Sigmas"
+        if key not in data.files:
+            raise CheckpointError(
+                f"{where} is not a StreamingDsmlService checkpoint "
+                f"(no '{key}' leaf; found e.g. {list(data.files)[:3]})")
+        arr = data[key]
+        want = (self.m, self.p, self.p)
+        if arr.shape != want:
+            raise CheckpointError(
+                f"{where} was saved by an incompatible service: "
+                f"state/Sigmas shape {arr.shape} != {want} "
+                f"(m={self.m}, p={self.p})")
+        exp = npz_safe_dtype(self.dtype)
+        if arr.dtype != exp:
+            raise CheckpointError(
+                f"{where} dtype {arr.dtype} != this service's {exp}")
+
     def load(self, path: str) -> None:
-        """Restore a checkpointed state (shape/dtype-validated; a
-        window-mode service restores its ring buffer too). Loading a
-        window-mode checkpoint into a non-window service (or vice
-        versa) raises rather than silently changing the forgetting
-        semantics."""
-        if self.window is None:
-            import numpy as np
-            fname = path if path.endswith(".npz") else path + ".npz"
-            if any(k.startswith("window/") for k in np.load(fname).files):
-                raise ValueError(
-                    "checkpoint was saved by a window-mode service; "
-                    "construct with window= to restore it")
+        """Restore a checkpointed state. The checkpoint's (m, p, dtype)
+        and window-ness are validated against this service BEFORE live
+        state is overwritten, so a wrong-path load cannot clobber a
+        serving model. Loading a window-mode checkpoint into a
+        non-window service (or vice versa) raises rather than silently
+        changing the forgetting semantics."""
+        fname = path if path.endswith(".npz") else path + ".npz"
+        data = load_npz(fname)
+        has_window = any(k.startswith("window/") for k in data.files)
+        if self.window is None and has_window:
+            raise ValueError(
+                "checkpoint was saved by a window-mode service; "
+                "construct with window= to restore it")
+        if self.window is not None and not has_window:
+            raise ValueError(
+                "checkpoint was saved by a non-window service; its ring "
+                "buffer is absent — construct without window= to "
+                "restore it")
+        self._validate_ckpt_compat(data, f"checkpoint '{fname}'")
         restored = restore_pytree(path, self._ckpt_tree())
         self.state = restored["state"]
         if self.window is not None:
             self.window = restored["window"]
         self._since_refit = 0
+        self._refit_failures = 0
+
+    def checkpoint(self) -> Optional[str]:
+        """Persist the current generation to the crash-safe store
+        (requires `ckpt_dir=`). Returns the payload path."""
+        if self.ckpt_store is None:
+            raise ValueError("no ckpt_dir configured on this service")
+        path = self.ckpt_store.save(self._ckpt_tree(), self.generation)
+        return path
+
+    def restore(self) -> int:
+        """Load the newest HEALTHY retained generation from the store,
+        falling back past corrupted checkpoints (requires `ckpt_dir=`).
+        Returns the restored generation."""
+        if self.ckpt_store is None:
+            raise ValueError("no ckpt_dir configured on this service")
+        tree, generation = self.ckpt_store.load(self._ckpt_tree())
+        self.state = tree["state"]
+        if self.window is not None:
+            self.window = tree["window"]
+        self._since_refit = 0
+        self._refit_failures = 0
+        obs.set_gauge("stream.generation", self.generation)
+        return generation

@@ -11,12 +11,12 @@ from repro.substrate.collectives import (
 from repro.substrate.compat import make_mesh, shard_map, use_mesh
 from repro.substrate.hostenv import force_host_device_count, host_device_env
 from repro.substrate.mesh import data_model_mesh, data_task_mesh, task_mesh
-from repro.substrate.probes import REPO_ROOT, run_probe
+from repro.substrate.probes import REPO_ROOT, popen_probe, run_probe
 
 __all__ = [
     "all_gather_tasks", "all_to_all_experts", "psum_stats",
     "make_mesh", "shard_map", "use_mesh",
     "force_host_device_count", "host_device_env",
     "data_model_mesh", "data_task_mesh", "task_mesh",
-    "REPO_ROOT", "run_probe",
+    "REPO_ROOT", "popen_probe", "run_probe",
 ]

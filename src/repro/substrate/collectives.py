@@ -31,6 +31,7 @@ def _record(op: str, x, axis: str) -> None:
         k = int(jax.lax.psum(1, axis))
     except Exception:
         k = 0       # axis not bound (helper called outside shard_map)
+        obs.inc("collective.axis_unbound", op=op, axis=axis)
     nbytes = int(x.size) * x.dtype.itemsize
     obs.inc("collective.calls", op=op, axis=axis)
     obs.inc("collective.bytes", k * nbytes, op=op, axis=axis)

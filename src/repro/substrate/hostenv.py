@@ -41,6 +41,8 @@ def force_host_device_count(n: int, env: MutableMapping[str, str] | None = None)
             from jax._src import xla_bridge
             initialized = xla_bridge.backends_are_initialized()
         except Exception:
+            from repro import obs
+            obs.inc("substrate.hostenv.init_probe_unavailable")
             return
         if initialized:
             import jax

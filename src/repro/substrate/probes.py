@@ -29,3 +29,20 @@ def run_probe(payload: str, *, n_devices: int = 8, timeout: int = 900,
     return subprocess.run([sys.executable, "-c", payload],
                           capture_output=True, text=True,
                           cwd=cwd or REPO_ROOT, timeout=timeout, env=env)
+
+
+def popen_probe(payload: str, *, n_devices: int = 8,
+                cwd: str | None = None) -> subprocess.Popen:
+    """`run_probe` that returns the LIVE `Popen` instead of waiting.
+
+    The chaos tier uses this to kill a probe mid-flight (SIGKILL while
+    it is mid-ingest) and then assert the parent-side artifacts — a
+    crash-safe checkpoint directory, say — survived the abrupt death.
+    The caller owns the process: `communicate()`/`kill()`/`wait()` it.
+    Same environment contract as `run_probe` (forced host devices,
+    `src` importable, repo-root cwd), stdout/stderr piped as text.
+    """
+    env = host_device_env(n_devices, extra_pythonpath=_SRC)
+    return subprocess.Popen([sys.executable, "-c", payload],
+                            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+                            text=True, cwd=cwd or REPO_ROOT, env=env)

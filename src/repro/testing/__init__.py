@@ -1,0 +1,17 @@
+"""Test-support utilities shipped inside the package.
+
+`repro.testing.faults` is the deterministic fault-injection harness the
+chaos tier (`tests/test_chaos.py`, `tools/chaos.py`) drives; it lives
+under `src/` (not `tests/`) so out-of-tree consumers can chaos-test
+their own deployments of the streaming service.
+"""
+from repro.testing.faults import (
+    FaultEvent, FaultSchedule, DivergenceInjector, apply_batch_fault,
+    build_schedule, make_clean_batch, truncate_file,
+)
+
+__all__ = [
+    "FaultEvent", "FaultSchedule", "DivergenceInjector",
+    "apply_batch_fault", "build_schedule", "make_clean_batch",
+    "truncate_file",
+]

@@ -1,0 +1,51 @@
+"""RL109 fixture: broad exception handlers that swallow silently.
+
+Two violations; the compliant handlers below must NOT be flagged.
+"""
+import traceback
+
+from repro import obs
+
+
+def swallow_with_pass(path):
+    try:
+        return open(path).read()
+    except Exception:           # RL109: silent pass
+        pass
+
+
+def swallow_with_return(compute):
+    try:
+        return compute()
+    except:                     # RL109: bare except, silent fallback
+        return None
+
+
+def ok_reraise(path):
+    try:
+        return open(path).read()
+    except Exception as e:
+        raise RuntimeError(f"cannot read {path}") from e
+
+
+def ok_records_counter(compute):
+    try:
+        return compute()
+    except Exception:
+        obs.inc("fixture.degraded")
+        return None
+
+
+def ok_captures_traceback(compute):
+    try:
+        return compute()
+    except Exception:
+        traceback.print_exc()
+        return None
+
+
+def ok_narrowed(path):
+    try:
+        return open(path).read()
+    except (OSError, UnicodeDecodeError):
+        return None

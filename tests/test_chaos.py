@@ -1,0 +1,333 @@
+"""Chaos tier: the resilience layer under a deterministic fault barrage.
+
+Every fault class `repro.testing.faults` can script — poisoned batches
+(NaN / Inf / magnitude outburst), forced refit divergence, torn
+checkpoint writes — plus the one it cannot (SIGKILL of a live ingest
+subprocess) is driven here against the invariants DESIGN.md §15 pins:
+
+* a poisoned chunk leaves `(Sigma, c)` bitwise unchanged and is
+  counted in the quarantine ledger + `stream.quarantine{reason}`;
+* a divergent refit never replaces the serving model: the generation
+  holds, predictions are bitwise the last good model's, the retry is
+  scheduled with backoff;
+* a truncated checkpoint head still restarts the service, one retained
+  generation back;
+* SIGKILL mid-ingest leaves a loadable checkpoint store behind;
+* the seeded end-to-end schedule (`tools/chaos.py`) reports zero
+  invariant violations.
+
+Run via `make test-chaos` (also part of plain pytest discovery).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.checkpoint.io import (
+    CheckpointError, atomic_write, restore_pytree, save_pytree,
+)
+from repro.checkpoint.manifest import CheckpointStore
+from repro.stream import StreamingDsmlService
+from repro.stream.guard import IngestGuard
+from repro.substrate import popen_probe
+from repro.testing import (
+    DivergenceInjector, apply_batch_fault, build_schedule,
+    make_clean_batch, truncate_file,
+)
+
+LAM, MU, THR = 0.4, 0.2, 1.0
+
+
+def _service(m=2, p=16, **kw):
+    kw.setdefault("lam", LAM)
+    kw.setdefault("mu", MU)
+    kw.setdefault("Lam", THR)
+    return StreamingDsmlService(m, p, **kw)
+
+
+# -- fault class 1-3: poisoned batches ------------------------------------
+
+@pytest.mark.parametrize("kind", ["nan", "inf", "outlier"])
+def test_poisoned_batch_is_quarantined_bitwise(kind):
+    rng = np.random.default_rng(3)
+    svc = _service(refit_every=10**9,
+                   guard=IngestGuard(warmup_chunks=1))
+    for _ in range(3):          # healthy traffic arms the outlier gate
+        svc.ingest(*make_clean_batch(rng, 2, 32, 16))
+    before = (np.asarray(svc.state.Sigmas).copy(),
+              np.asarray(svc.state.cs).copy(),
+              np.asarray(svc.state.counts).copy())
+    quarantined_before = obs.counter_total("stream.quarantine")
+    X, y = apply_batch_fault(*make_clean_batch(rng, 2, 32, 16), kind, rng)
+    assert svc.ingest(X, y) is None
+    after = (np.asarray(svc.state.Sigmas), np.asarray(svc.state.cs),
+             np.asarray(svc.state.counts))
+    for b, a in zip(before, after):
+        assert np.array_equal(b, a)        # bitwise: reject = no fold
+    assert svc.guard.total_quarantined == 1
+    want_reason = "outlier" if kind == "outlier" else "nonfinite"
+    assert svc.guard.ledger[-1].reason == want_reason
+    assert obs.counter_total("stream.quarantine") == quarantined_before + 1
+    # the stream keeps flowing afterwards
+    assert svc.ingest(*make_clean_batch(rng, 2, 32, 16)) is None
+    assert svc.guard.accepted == 4
+
+
+def test_guard_magnitude_ceiling_routes_standalone():
+    rng = np.random.default_rng(4)
+    svc = _service(guard=IngestGuard(max_abs=50.0), refit_every=10**9)
+    svc.ingest(*make_clean_batch(rng, 2, 32, 16))
+    X, y = make_clean_batch(rng, 2, 32, 16)
+    X = X.at[0, 0, 0].set(1e3)
+    assert svc.ingest(X, y) is None
+    assert svc.guard.ledger[-1].reason == "magnitude"
+    assert svc.guard.accepted == 1
+
+
+def test_quarantine_ledger_is_bounded():
+    g = IngestGuard(ledger_capacity=4)
+    rng = np.random.default_rng(5)
+    X, y = apply_batch_fault(*make_clean_batch(rng, 1, 8, 8), "nan", rng)
+    for _ in range(7):
+        ok, reason = g.admit(X, y)
+        assert (ok, reason) == (False, "nonfinite")
+    assert len(g.ledger) == 4
+    assert g.dropped_records == 3
+    assert g.total_quarantined == 7
+
+
+# -- fault class 4: refit divergence --------------------------------------
+
+def test_forced_divergent_refit_rolls_back_and_recovers():
+    rng = np.random.default_rng(6)
+    svc = _service(refit_every=64, guard=False)
+    svc.ingest(*make_clean_batch(rng, 2, 64, 16))      # triggers refit
+    assert svc.generation == 1
+    Xp = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    good_pred = np.asarray(svc.predict(Xp))
+
+    inj = DivergenceInjector(svc)
+    inj.arm(1)
+    info = svc.refit()
+    assert inj.injected == 1
+    assert svc.generation == 1                 # rollback kept last good
+    assert int(info.generation) == 1
+    assert svc.rollbacks == 1
+    assert svc.last_health is not None and not svc.last_health.healthy
+    assert svc.last_health.reason == "nonfinite_model"
+    assert svc._interval == 2 * 64             # capped exponential backoff
+    assert np.array_equal(np.asarray(svc.predict(Xp)), good_pred)
+
+    info = svc.refit()                         # escalated retry, healthy
+    inj.uninstall()
+    assert svc.generation == 2
+    assert svc._refit_failures == 0
+    assert svc._interval == 64                 # cadence back to base
+    assert np.isfinite(np.asarray(svc.predict(Xp))).all()
+
+
+def test_backoff_caps_at_max_refit_interval():
+    svc = _service(refit_every=64, max_refit_interval=256, guard=False)
+    rng = np.random.default_rng(7)
+    svc.ingest(*make_clean_batch(rng, 2, 64, 16))
+    inj = DivergenceInjector(svc)
+    inj.arm(5)
+    for want in (128, 256, 256, 256, 256):     # 64*2^k capped at 256
+        svc.refit()
+        assert svc._interval == want
+    assert svc.generation == 1
+    assert svc.rollbacks == 5
+    inj.uninstall()
+
+
+# -- fault class 5: torn checkpoints --------------------------------------
+
+def _stamped_tree(svc, generation):
+    svc.state = svc.state._replace(
+        generation=jnp.asarray(generation, jnp.int32))
+    return svc._ckpt_tree()
+
+
+def test_truncated_head_falls_back_one_generation(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=3)
+    svc = _service(guard=False)
+    for g in (1, 2, 3):
+        store.save(_stamped_tree(svc, g), g)
+    assert store.generations() == [3, 2, 1]
+    truncate_file(str(tmp_path / "ckpt_00000003.npz"), keep_fraction=0.4)
+    tree, gen = store.load(svc._ckpt_tree())
+    assert gen == 2
+    assert int(tree["state"].generation) == 2
+    assert obs.counter_total("checkpoint.fallback", reason="checksum") >= 1
+
+
+def test_corrupt_manifest_degrades_to_directory_scan(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=3)
+    svc = _service(guard=False)
+    for g in (1, 2):
+        store.save(_stamped_tree(svc, g), g)
+    (tmp_path / "MANIFEST.json").write_text("{ not json")
+    tree, gen = store.load(svc._ckpt_tree())
+    assert gen == 2             # head intact, found without the manifest
+    # a truncated head is still skipped (restore error, not checksum)
+    truncate_file(str(tmp_path / "ckpt_00000002.npz"), keep_fraction=0.2)
+    tree, gen = store.load(svc._ckpt_tree())
+    assert gen == 1
+
+
+def test_store_prunes_to_keep(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    svc = _service(guard=False)
+    for g in range(1, 6):
+        store.save(_stamped_tree(svc, g), g)
+    assert store.generations() == [5, 4]
+    names = sorted(f for f in os.listdir(tmp_path) if f.endswith(".npz"))
+    assert names == ["ckpt_00000004.npz", "ckpt_00000005.npz"]
+
+
+def test_all_generations_corrupt_raises(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    svc = _service(guard=False)
+    for g in (1, 2):
+        store.save(_stamped_tree(svc, g), g)
+    for name in ("ckpt_00000001.npz", "ckpt_00000002.npz"):
+        truncate_file(str(tmp_path / name), keep_fraction=0.1)
+    with pytest.raises(CheckpointError, match="no loadable checkpoint"):
+        store.load(svc._ckpt_tree())
+
+
+def test_atomic_save_failure_keeps_previous(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    save_pytree(path, {"a": jnp.arange(4.0)})
+
+    def boom(f):
+        f.write(b"partial garbage")
+        raise RuntimeError("simulated crash mid-write")
+
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        atomic_write(path, boom)
+    restored = restore_pytree(path, {"a": jnp.zeros(4)})   # still intact
+    assert np.array_equal(np.asarray(restored["a"]), [0, 1, 2, 3])
+    assert [f for f in os.listdir(tmp_path) if ".tmp." in f] == []
+
+
+def test_service_load_validates_compat(tmp_path):
+    svc = _service(m=2, p=16, guard=False)
+    path = str(tmp_path / "svc.npz")
+    svc.save(path)
+    wrong_p = _service(m=2, p=32, guard=False)
+    with pytest.raises(CheckpointError, match="incompatible"):
+        wrong_p.load(path)
+    wrong_m = _service(m=4, p=16, guard=False)
+    with pytest.raises(CheckpointError, match="incompatible"):
+        wrong_m.load(path)
+    # f16 lands on disk as f16 (unlike bf16's f32 upcast), so it is a
+    # genuine on-disk dtype mismatch against the f32 checkpoint
+    wrong_dt = _service(m=2, p=16, dtype=jnp.float16, guard=False)
+    with pytest.raises(CheckpointError, match="dtype"):
+        wrong_dt.load(path)
+    with pytest.raises(CheckpointError, match="not a StreamingDsmlService"):
+        save_pytree(str(tmp_path / "other.npz"), {"weights": jnp.zeros(3)})
+        svc.load(str(tmp_path / "other.npz"))
+    svc2 = _service(m=2, p=16, guard=False)
+    svc2.load(path)             # the compatible load still works
+    assert svc2.generation == svc.generation
+
+
+def test_service_checkpoint_restore_cycle(tmp_path):
+    rng = np.random.default_rng(8)
+    # max_refit_interval=32 pins the cadence: the drift-adaptive widen
+    # must not skip refits here, every chunk commits a generation
+    svc = _service(refit_every=32, max_refit_interval=32, guard=False,
+                   ckpt_dir=str(tmp_path), ckpt_keep=2)
+    for _ in range(3):
+        svc.ingest(*make_clean_batch(rng, 2, 32, 16))
+    assert svc.generation == 3
+    assert svc.ckpt_store.generations() == [3, 2]
+    truncate_file(str(tmp_path / "ckpt_00000003.npz"), keep_fraction=0.3)
+    fresh = _service(refit_every=32, guard=False, ckpt_dir=str(tmp_path))
+    assert fresh.restore() == 2
+    assert fresh.generation == 2
+    Xp = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    assert np.isfinite(np.asarray(fresh.predict(Xp))).all()
+
+
+# -- fault class 6: SIGKILL mid-ingest ------------------------------------
+
+_KILL_PAYLOAD = """
+import numpy as np
+from repro.stream import StreamingDsmlService
+from repro.testing import make_clean_batch
+
+svc = StreamingDsmlService(2, 16, lam=0.4, mu=0.2, Lam=1.0,
+                           refit_every=32, guard=False,
+                           ckpt_dir={ckpt_dir!r})
+rng = np.random.default_rng(0)
+for step in range(100000):
+    svc.ingest(*make_clean_batch(rng, 2, 32, 16))
+    print("gen", svc.generation, flush=True)
+"""
+
+
+def test_sigkill_mid_ingest_leaves_loadable_store(tmp_path):
+    ckpt_dir = str(tmp_path / "store")
+    proc = popen_probe(_KILL_PAYLOAD.format(ckpt_dir=ckpt_dir),
+                       n_devices=1)
+    manifest = os.path.join(ckpt_dir, "MANIFEST.json")
+
+    def _retained() -> int:
+        # tolerate reading the manifest concurrently with the child's
+        # atomic rewrites — a failed read counts as "not yet"
+        import json
+        try:
+            with open(manifest) as f:
+                return len(json.load(f)["checkpoints"])
+        except (OSError, ValueError, KeyError):
+            return 0
+
+    try:
+        deadline = time.time() + 300
+        # wait until the child has committed at least two generations,
+        # so it dies mid-stream with retained history behind it
+        while time.time() < deadline:
+            if _retained() >= 2:
+                break
+            if proc.poll() is not None:
+                out, err = proc.communicate()
+                pytest.fail(f"ingest child died early:\n{err}")
+            time.sleep(0.2)
+        else:
+            pytest.fail("child never wrote two checkpoint generations")
+    finally:
+        proc.kill()             # SIGKILL: no atexit, no cleanup
+        proc.communicate()
+    svc = _service(guard=False, ckpt_dir=ckpt_dir)
+    gen = svc.restore()
+    assert gen >= 2
+    assert np.isfinite(np.asarray(svc.state.Sigmas)).all()
+
+
+# -- the seeded end-to-end schedule ---------------------------------------
+
+def test_seeded_schedule_holds_all_invariants(tmp_path):
+    import tools.chaos as chaos
+    report = chaos.run_schedule(seed=7, steps=24,
+                                ckpt_dir=str(tmp_path / "store"))
+    assert report["failures"] == []
+    assert report["poisoned"] >= 4             # >= 4 fault events fired
+    assert len(report["schedule"]) >= 3        # across >= 3 fault classes
+    assert report["rollbacks"] >= 1            # divergence class fired
+    assert report["restore"] is not None       # truncation class fired
+
+
+def test_schedule_is_deterministic():
+    a = build_schedule(40, 123, per_kind=3, start=2)
+    b = build_schedule(40, 123, per_kind=3, start=2)
+    assert a == b
+    assert all(2 <= ev.step < 40 for ev in a.events)
+    assert a.by_kind() == {"nan": 3, "inf": 3, "outlier": 3}

@@ -67,8 +67,8 @@ def test_cache_cli_never_imports_jax():
 
 def test_every_code_documented():
     assert all(code.startswith("RL") for code in CODES)
-    for findings_source in ("RL101", "RL105", "RL107", "RL108", "RL201",
-                            "RL210", "RL212", "RL301", "RL303"):
+    for findings_source in ("RL101", "RL105", "RL107", "RL108", "RL109",
+                            "RL201", "RL210", "RL212", "RL301", "RL303"):
         assert findings_source in CODES
 
 
@@ -100,6 +100,15 @@ def test_fixture_tracer_hazard():
     f = lint_file(FIXTURES / "bad_tracer_hazard.py")
     assert codes(f) == ["RL107"]
     assert len(f) == 2          # `if g > 0` and `float(g)`
+
+
+def test_fixture_exception_swallow():
+    f = lint_file(FIXTURES / "bad_exception_swallow.py")
+    assert codes(f) == ["RL109"]
+    # silent `pass` + bare-except `return None`; the re-raising,
+    # obs-recording, traceback-capturing, and narrowed handlers must
+    # NOT fire
+    assert len(f) == 2
 
 
 def test_fixture_obs_in_jit():

@@ -1,0 +1,172 @@
+"""Chaos driver: run a seeded fault schedule against a live service.
+
+Drives every scriptable fault class from `repro.testing.faults` through
+one `StreamingDsmlService` and asserts the resilience invariants the
+chaos tier pins (ISSUE/DESIGN.md §15):
+
+* the service NEVER serves a non-finite prediction;
+* the generation NEVER regresses except by an explicit `restore()`;
+* poisoned chunks leave `(Sigma, c)` bitwise unchanged (quarantined);
+* forced refit divergence rolls back to the last good generation;
+* truncating the checkpoint head still restarts from generation K-1.
+
+Deterministic by construction: the run is a pure function of --seed.
+
+    PYTHONPATH=src python tools/chaos.py --seed 7 --steps 24
+    make test-chaos     # the pytest tier around the same machinery
+
+Exit 0 when every invariant held, 1 with a FAIL report otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(_HERE), "src"))
+
+
+def run_schedule(seed: int = 7, steps: int = 24, m: int = 4, p: int = 32,
+                 n: int = 64, refit_every: int = 128,
+                 ckpt_dir: str | None = None) -> dict:
+    """One chaos run. Returns a report dict with `failures: [...]`."""
+    import jax.numpy as jnp
+
+    from repro.stream import StreamingDsmlService
+    from repro.testing import (
+        DivergenceInjector, apply_batch_fault, build_schedule,
+        make_clean_batch, truncate_file,
+    )
+
+    from repro.stream.guard import IngestGuard
+
+    rng = np.random.default_rng(seed)
+    # first two steps guaranteed clean so the outlier gate has a
+    # reference scale; warmup_chunks=1 arms it after one accepted chunk
+    schedule = build_schedule(steps, seed, per_kind=2, start=2)
+    svc = StreamingDsmlService(m, p, lam=0.4, mu=0.2, Lam=1.0,
+                               refit_every=refit_every,
+                               guard=IngestGuard(warmup_chunks=1),
+                               ckpt_dir=ckpt_dir, ckpt_keep=3)
+    inj = DivergenceInjector(svc)
+    failures: list = []
+    last_generation = 0
+    clean_steps = poisoned_steps = 0
+
+    # -- fault classes 1-3: poisoned batches; class 4: forced divergence
+    for step in range(steps):
+        X, y = make_clean_batch(rng, m, n, p)
+        X_clean = X
+        kind = schedule.fault_for(step)
+        if kind is not None:
+            X, y = apply_batch_fault(X, y, kind, rng)
+            poisoned_steps += 1
+            before = (np.asarray(svc.state.Sigmas).copy(),
+                      np.asarray(svc.state.cs).copy())
+        else:
+            clean_steps += 1
+            before = None
+        # arm one forced divergence right before the refit threshold
+        # trips, so the rollback path fires mid-schedule
+        if step == steps // 2 and inj.injected == 0:
+            inj.arm(1)
+        svc.ingest(X, y)
+        if before is not None:
+            after = (np.asarray(svc.state.Sigmas), np.asarray(svc.state.cs))
+            if not (np.array_equal(before[0], after[0], equal_nan=True)
+                    and np.array_equal(before[1], after[1], equal_nan=True)):
+                failures.append(f"step {step}: poisoned '{kind}' chunk "
+                                f"mutated (Sigma, c)")
+        gen = svc.generation
+        if gen < last_generation:
+            failures.append(f"step {step}: generation regressed "
+                            f"{last_generation} -> {gen}")
+        last_generation = gen
+        pred = np.asarray(svc.predict(X_clean[:, :4, :]))
+        if not np.isfinite(pred).all():
+            failures.append(f"step {step}: served a non-finite prediction")
+
+    if svc.guard.total_quarantined != poisoned_steps:
+        failures.append(f"guard quarantined {svc.guard.total_quarantined} "
+                        f"of {poisoned_steps} poisoned chunks")
+    if inj.injected == 0:
+        failures.append("divergence injector never fired (schedule too "
+                        "short for the refit cadence?)")
+    elif svc.rollbacks < inj.injected:
+        failures.append(f"{inj.injected} forced divergences but only "
+                        f"{svc.rollbacks} rollbacks")
+    inj.uninstall()
+
+    # -- fault class 5: torn checkpoint head, restart from K-1
+    report_restore = None
+    if ckpt_dir is not None and svc.ckpt_store is not None:
+        gens = svc.ckpt_store.generations()
+        if len(gens) < 2:
+            svc.checkpoint()    # ensure at least two retained generations
+            svc.state = svc.state._replace(
+                generation=svc.state.generation + 1)
+            svc.checkpoint()
+            gens = svc.ckpt_store.generations()
+        head = os.path.join(ckpt_dir, f"ckpt_{gens[0]:08d}.npz")
+        truncate_file(head, keep_fraction=0.3)
+        restored = svc.restore()
+        report_restore = {"retained": gens, "restored": restored}
+        if restored != gens[1]:
+            failures.append(f"truncated head gen {gens[0]}: restored "
+                            f"{restored}, wanted fallback to {gens[1]}")
+        if not np.isfinite(np.asarray(svc.state.beta_tilde)).all():
+            failures.append("restored model is non-finite")
+
+    return {
+        "seed": seed, "steps": steps,
+        "clean": clean_steps, "poisoned": poisoned_steps,
+        "schedule": schedule.by_kind(),
+        "quarantine": svc.guard.summary(),
+        "generation": svc.generation,
+        "rollbacks": svc.rollbacks,
+        "divergences_injected": inj.injected,
+        "restore": report_restore,
+        "failures": failures,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--m", type=int, default=4)
+    ap.add_argument("--p", type=int, default=32)
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--refit-every", type=int, default=128)
+    ap.add_argument("--json", action="store_true",
+                    help="emit the full report as JSON")
+    args = ap.parse_args(argv)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        report = run_schedule(seed=args.seed, steps=args.steps, m=args.m,
+                              p=args.p, n=args.n,
+                              refit_every=args.refit_every,
+                              ckpt_dir=ckpt_dir)
+    if args.json:
+        print(json.dumps(report, indent=2, default=str))
+    else:
+        print(f"chaos seed={report['seed']} steps={report['steps']} "
+              f"(poisoned {report['poisoned']}): "
+              f"gen={report['generation']} rollbacks={report['rollbacks']} "
+              f"quarantined={report['quarantine']['quarantined']} "
+              f"restore={report['restore']}")
+    if report["failures"]:
+        for f in report["failures"]:
+            print(f"FAIL: {f}")
+        return 1
+    print("all resilience invariants held")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -40,6 +40,9 @@ CODES = {
     "RL108": "repro.obs counter/span call in jit-reachable code — "
              "telemetry must record eagerly or via the "
              "common.record_route funnel",
+    "RL109": "broad exception handler (bare except / except Exception) "
+             "swallows the error without re-raising, recording to "
+             "repro.obs, or capturing the traceback",
     # Engine 2 — static tiling/VMEM contract checks (contracts.py)
     "RL201": "BlockSpec index_map arity disagrees with its pallas_call grid",
     "RL202": "BlockSpec tile parameter lacks a divisibility assert in its "

@@ -419,6 +419,57 @@ def check_obs_in_jit(mod: ModuleLint) -> None:
                          f"wrapper) or via kernels.common.record_route")
 
 
+# --- swallowed exceptions (RL109) ----------------------------------------
+
+_BROAD_EXC = {"Exception", "BaseException", "builtins.Exception",
+              "builtins.BaseException"}
+
+
+def _is_broad_handler(mod: ModuleLint, handler: ast.ExceptHandler) -> bool:
+    """Bare `except:`, or a clause (or tuple member) catching
+    Exception/BaseException."""
+    if handler.type is None:
+        return True
+    types = handler.type.elts if isinstance(handler.type, ast.Tuple) \
+        else [handler.type]
+    return any(mod.canonical(t) in _BROAD_EXC for t in types)
+
+
+def _handler_records(mod: ModuleLint, handler: ast.ExceptHandler) -> bool:
+    """Does the handler body re-raise, record to `repro.obs`, or capture
+    the traceback? (The three accepted ways to not lose the error.)"""
+    for node in ast.walk(ast.Module(body=handler.body, type_ignores=[])):
+        if isinstance(node, ast.Raise):
+            return True
+        if isinstance(node, ast.Call):
+            cname = mod.canonical(node.func)
+            if cname and (cname == OBS_MODULE
+                          or cname.startswith(OBS_MODULE + ".")
+                          or cname.startswith("traceback.")):
+                return True
+    return False
+
+
+def check_exception_swallowing(mod: ModuleLint) -> None:
+    """Broad handlers (`except:` / `except Exception` / BaseException)
+    must not swallow the error silently: the body has to re-raise,
+    record a `repro.obs` counter, or capture the traceback. A silent
+    `pass`/`return` fallback turns every future failure — a torn
+    checkpoint, a dead backend probe — into undebuggable nothing; the
+    resilience layer (DESIGN.md §15) depends on degraded paths staying
+    observable. Narrowing to the concrete exception types also
+    satisfies the rule."""
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if _is_broad_handler(mod, node) and not _handler_records(mod, node):
+            mod.flag(node, "RL109",
+                     "broad exception handler swallows the error "
+                     "silently — re-raise, narrow the exception types, "
+                     "record a repro.obs counter, or capture the "
+                     "traceback")
+
+
 # --- driver --------------------------------------------------------------
 
 ALL_CHECKS = (
@@ -428,6 +479,7 @@ ALL_CHECKS = (
     check_config_mutation,
     check_tracer_hazards,
     check_obs_in_jit,
+    check_exception_swallowing,
 )
 
 
