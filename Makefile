@@ -4,7 +4,8 @@ PY ?= python
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
 .PHONY: test test-stats test-cpu8 test-chaos lint bench-smoke bench-json \
-	check-regression bench-stream-smoke smoke-examples obs-report
+	check-regression bench-stream-smoke bench-serve-smoke smoke-examples \
+	obs-report
 
 # default flow: the static-analysis pass first (fails in seconds, before
 # any kernel test runs), then the full pytest suite (which includes the
@@ -44,7 +45,8 @@ test-chaos:
 test-cpu8:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	$(PY) -m pytest -q tests/test_distributed.py tests/test_moe_a2a.py \
-	    tests/test_batched_solver.py tests/test_stream.py
+	    tests/test_batched_solver.py tests/test_stream.py \
+	    tests/test_serve.py
 
 bench-smoke:
 	$(PY) benchmarks/kernels_bench.py
@@ -67,9 +69,17 @@ bench-stream-smoke:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	$(PY) benchmarks/stream_bench.py --smoke
 
+# serving front rows (request p99 under load, ingest-while-serving
+# throughput) as the committed machine-readable artifact check-regression
+# gates with SERVE_BOUNDS
+bench-serve-smoke:
+	$(PY) -m benchmarks.run --only serve --json-out BENCH_serve.json
+
 smoke-examples:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	$(PY) examples/stream_online.py --smoke
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	$(PY) examples/serve_front.py --smoke
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	$(PY) examples/quickstart.py
 

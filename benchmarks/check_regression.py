@@ -4,7 +4,9 @@
 --json-out`); this script fails CI when a tracked speedup ratio drops
 below its floor — the fused batched kernel must never be slower than
 the vmap path it replaced, and the fused-momentum FISTA iteration must
-never be slower than the two-op pair.
+never be slower than the two-op pair. `make bench-serve-smoke` writes
+BENCH_serve.json the same way; its serving-front rows are gated by
+`SERVE_BOUNDS` (request p99 ceiling, ingest-while-serving floor).
 
 Usage:
     python benchmarks/check_regression.py [--current PATH]
@@ -45,6 +47,44 @@ FLOORS = (
     ("logistic_grad_fused_over_unfused_p8192", 0.85),
     ("rank_update_fused_over_unfused", 0.85),
 )
+
+# Bounds on the committed serving-front artifact (BENCH_serve.json,
+# written by `make bench-serve-smoke`): (row name, field, kind, bound).
+# "max" rows are latency ceilings, "min" rows are throughput floors.
+# Margins are deliberately generous (~25x under the measured p99 of
+# ~4-10ms, ~10x under the measured ~3000 rows/s): a shared CI worker is
+# slow and noisy, and the gate exists to catch the serving front losing
+# an order of magnitude — a torn microbatch loop, a sync landing on the
+# admission path — not to chase scheduler jitter.
+SERVE_BOUNDS = (
+    ("stream_serve_p99_ms", "p99_ms", "max", 250.0),
+    ("stream_ingest_while_serving", "rows_per_s", "min", 300.0),
+    ("stream_ingest_while_serving", "p99_ms", "max", 500.0),
+)
+
+
+def check_serve_bounds(path: str) -> list:
+    """Bound the serving-front rows of BENCH_serve.json; a missing file
+    or row fails loudly (a stale gate is no gate)."""
+    try:
+        by_name = {r["name"]: r for r in _rows(path)}
+    except FileNotFoundError:
+        return [f"serve: {path} missing (run `make bench-serve-smoke`)"]
+    failures = []
+    for name, field, kind, bound in SERVE_BOUNDS:
+        row = by_name.get(name)
+        if row is None or field not in row:
+            failures.append(f"serve {name}.{field}: missing from {path}")
+            continue
+        val = row[field]
+        ok = val <= bound if kind == "max" else val >= bound
+        if ok:
+            print(f"ok serve {name}.{field}: {val:.2f} "
+                  f"({kind} bound {bound:.2f})")
+        else:
+            failures.append(f"serve {name}.{field}: {val:.2f} violates "
+                            f"{kind} bound {bound:.2f}")
+    return failures
 
 
 def _rows(path: str) -> list:
@@ -163,6 +203,8 @@ def check_guard_overhead(budget: float = 0.02) -> list:
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--current", default="BENCH_kernels.json")
+    ap.add_argument("--serve", default="BENCH_serve.json",
+                    help="serving-front artifact for SERVE_BOUNDS")
     ap.add_argument("--baseline", default=None)
     ap.add_argument("--max-drop", type=float, default=0.5,
                     help="min allowed current/baseline speedup ratio")
@@ -188,6 +230,7 @@ def main() -> int:
                         f"{name}: {cur[name]:.2f}x is {ratio:.2f} of "
                         f"baseline {base[name]:.2f}x (< {args.max_drop})")
 
+    failures.extend(check_serve_bounds(args.serve))
     failures.extend(check_obs_overhead(args.current))
     failures.extend(check_guard_overhead())
 

@@ -8,21 +8,25 @@ experiment sweeps persist JSON artifacts under experiments/paper/.
   comm   — paper Table 1 communication column (+ one-round HLO proof)
   rates  — Tables 1-2 rate sanity (error scaling vs n and m)
   kern   — kernel microbenches
+  serve  — streaming serving front (p99 under load, ingest-while-serving)
   roof   — dry-run / roofline summary (reads experiments/dryrun)
 
 Usage: python -m benchmarks.run [--only fig1,comm] [--runs N]
                                 [--json-out BENCH_kernels.json]
                                 [--telemetry PATH]
 
-`--json-out` additionally persists the kern section as machine-readable
-JSON: `{"meta": {...}, "rows": [...]}` — run metadata (backend, device
-count, jax version, git SHA) plus the final telemetry snapshot under
-`meta`, one object per benchmark row (name/us plus any derived fields
-like flops and speedup) under `rows` — so the perf trajectory is
-tracked across PRs AND attributable to the environment that produced
-it. `benchmarks/check_regression.py` gates on it (it also still reads
-the pre-PR-7 flat-list format). `--telemetry PATH` writes the full obs
-snapshot of the whole benchmark run as its own artifact.
+`--json-out` additionally persists the machine-readable sections (kern
+and serve) as JSON: `{"meta": {...}, "rows": [...]}` — run metadata
+(backend, device count, jax version, git SHA) plus the final telemetry
+snapshot under `meta`, one object per benchmark row (name/us plus any
+derived fields like flops and speedup) under `rows` — so the perf
+trajectory is tracked across PRs AND attributable to the environment
+that produced it. Select ONE machine-readable section per artifact
+(`--only kern --json-out BENCH_kernels.json`, `--only serve --json-out
+BENCH_serve.json`); `benchmarks/check_regression.py` gates on both
+files (it also still reads the pre-PR-7 flat-list format).
+`--telemetry PATH` writes the full obs snapshot of the whole benchmark
+run as its own artifact.
 """
 from __future__ import annotations
 
@@ -82,11 +86,12 @@ def rows_to_json(rows) -> list:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig2,comm,rates,kern,roof")
+                    help="comma list: fig1,fig2,comm,rates,kern,serve,roof")
     ap.add_argument("--runs", type=int, default=5,
                     help="averaging runs for the paper sweeps")
     ap.add_argument("--json-out", default=None, metavar="PATH",
-                    help="also write the kern rows as JSON to PATH")
+                    help="also write the machine-readable rows (kern / "
+                         "serve sections) as JSON to PATH")
     ap.add_argument("--telemetry", default=None, metavar="PATH",
                     help="write the run's repro.obs snapshot to PATH")
     args = ap.parse_args()
@@ -99,6 +104,9 @@ def main() -> None:
     if want is None or "kern" in want:
         from benchmarks.kernels_bench import main as kern_main
         sections.append(("kern", kern_main))
+    if want is None or "serve" in want:
+        from benchmarks.stream_bench import serve_rows as serve_main
+        sections.append(("serve", lambda: serve_main(smoke=True)))
     if want is None or "rates" in want:
         from benchmarks.rates import main as rates_main
         sections.append(("rates",
@@ -115,37 +123,40 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
-    wrote_json = False
+    json_rows = []   # rows from machine-readable sections, in run order
+    JSONABLE = {"kern", "serve"}
     for name, fn in sections:
         try:
             rows = fn()
             for row in rows:
                 print(row, flush=True)
-            if name == "kern" and args.json_out:
-                from repro import obs
-                artifact = {
-                    "meta": {**run_metadata(),
-                             "telemetry": obs.snapshot()},
-                    "rows": rows_to_json(rows),
-                }
-                with open(args.json_out, "w") as f:
-                    json.dump(artifact, f, indent=2)
-                    f.write("\n")
-                print(f"# wrote {args.json_out}", file=sys.stderr)
-                wrote_json = True
+            if name in JSONABLE and args.json_out:
+                json_rows.extend(rows)
         except Exception:
             failures += 1
             print(f"{name}_FAILED,0,see stderr", flush=True)
             traceback.print_exc()
+    if args.json_out and json_rows:
+        from repro import obs
+        artifact = {
+            "meta": {**run_metadata(), "telemetry": obs.snapshot()},
+            "rows": rows_to_json(json_rows),
+        }
+        with open(args.json_out, "w") as f:
+            json.dump(artifact, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {args.json_out}", file=sys.stderr)
     if args.telemetry:
         from repro.obs import export as obs_export
         obs_export.write_snapshot(args.telemetry, meta=run_metadata())
         print(f"# wrote {args.telemetry}", file=sys.stderr)
-    if args.json_out and not wrote_json:
-        # never exit 0 leaving a stale baseline: the kern section was
-        # deselected or failed, so the requested JSON was not produced
-        print(f"ERROR: --json-out {args.json_out} requested but the kern "
-              "section did not run to completion", file=sys.stderr)
+    if args.json_out and not json_rows:
+        # never exit 0 leaving a stale baseline: no machine-readable
+        # section ran to completion, so the requested JSON was not
+        # produced
+        print(f"ERROR: --json-out {args.json_out} requested but no "
+              "machine-readable section (kern/serve) ran to completion",
+              file=sys.stderr)
         failures += 1
     if failures:
         sys.exit(1)

@@ -18,15 +18,107 @@ of failing — the disabled path must stay runnable.
 from __future__ import annotations
 
 import argparse
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.paper_common import time_fn as _time
 from repro import obs
 from repro.core import gen_regression
-from repro.stream import ingest, init_stream_state, refit
+from repro.stream import (
+    ServingFront, StreamingDsmlService, ingest, init_stream_state, refit,
+)
 from repro.stream.accumulate import ingest_sharded
+
+
+def serve_rows(smoke: bool = True):
+    """The serving-front rows: request p99 under a closed-loop predict
+    load, then SUSTAINED ingest rows/sec while that load keeps running
+    — the millions-of-users artifact (ROADMAP item 1). Latencies are
+    measured client-side (perf_counter around each resolved future) so
+    the quantiles cover the full admission -> microbatch -> dispatch ->
+    result path; `benchmarks/check_regression.py` bounds the p99 and
+    the while-serving ingest floor from the committed BENCH_serve.json.
+    """
+    m, p, n_chunk = (4, 64, 256) if smoke else (8, 256, 1024)
+    n_clients = 4
+    serve_seconds = 1.0 if smoke else 3.0
+    rows = []
+    rng = np.random.default_rng(0)
+    svc = StreamingDsmlService(
+        m, p, lam=0.4, mu=0.2, Lam=1.0, guard=False,
+        refit_every=n_chunk, max_refit_interval=4 * n_chunk,
+        lasso_iters=200, debias_iters=200, refit_tol=1e-5)
+
+    def chunk():
+        X = rng.standard_normal((m, n_chunk, p)).astype(np.float32)
+        w = rng.standard_normal((m, p)).astype(np.float32) / np.sqrt(p)
+        y = (np.einsum("tnp,tp->tn", X, w)
+             + 0.05 * rng.standard_normal((m, n_chunk))).astype(np.float32)
+        return jnp.asarray(X), jnp.asarray(y)
+
+    svc.ingest(*chunk())                      # a real model + compiles
+    query = rng.standard_normal(p).astype(np.float32)
+
+    def load(front, stop, out):
+        """One closed-loop client: predict, note latency, repeat."""
+        lats = []
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            front.predict(query, timeout=30)
+            lats.append((time.perf_counter() - t0) * 1e3)
+        out.append(lats)
+
+    def run_phase(seconds, feeder=None):
+        """Drive the client pool for `seconds` (while `feeder` folds
+        chunks, when given); returns (client latencies ms, chunks fed)."""
+        with ServingFront(svc, max_batch=64, max_delay_ms=2.0) as front:
+            front.predict(query, timeout=30)  # compile outside the clock
+            stop, out = threading.Event(), []
+            clients = [threading.Thread(target=load,
+                                        args=(front, stop, out))
+                       for _ in range(n_clients)]
+            for c in clients:
+                c.start()
+            fed = 0
+            deadline = time.perf_counter() + seconds
+            if feeder is not None:
+                while time.perf_counter() < deadline:
+                    feeder()
+                    fed += 1
+                jax.block_until_ready(svc.state.Sigmas)
+            else:
+                while time.perf_counter() < deadline:
+                    time.sleep(0.01)
+            stop.set()
+            for c in clients:
+                c.join()
+        return [v for lats in out for v in lats], fed
+
+    # -- phase 1: serve-only p99 ------------------------------------------
+    lats, _ = run_phase(serve_seconds)
+    p50, p99 = np.percentile(lats, [50, 99])
+    rows.append(f"stream_serve_p99_ms,{np.mean(lats) * 1e3:.0f},"
+                f"p50_ms={p50:.2f},p99_ms={p99:.2f},requests={len(lats)}")
+    obs.set_gauge("serve.bench.p99_ms", float(p99))
+
+    # -- phase 2: sustained ingest under the same predict load ------------
+    t0 = time.perf_counter()
+    lats, fed = run_phase(serve_seconds,
+                          feeder=lambda: svc.ingest(*chunk()))
+    elapsed = time.perf_counter() - t0
+    rate = m * n_chunk * fed / elapsed
+    p50, p99 = np.percentile(lats, [50, 99])
+    us_chunk = elapsed / max(fed, 1) * 1e6
+    rows.append(f"stream_ingest_while_serving,{us_chunk:.0f},"
+                f"rows_per_s={rate:.0f},p50_ms={p50:.2f},"
+                f"p99_ms={p99:.2f},chunks={fed},requests={len(lats)}")
+    obs.set_gauge("serve.bench.ingest_while_serving_rows_per_s",
+                  float(rate))
+    return rows
 
 
 def main(argv=None):
@@ -124,6 +216,9 @@ def main(argv=None):
     rows.append(f"stream_obs_refit_latency,"
                 f"{ref_ms['mean'] * 1e3 if ref_ms else 0:.0f},"
                 f"refits={ref_ms['count'] if ref_ms else 0}")
+
+    # -- serving front: p99 under load + ingest-while-serving -------------
+    rows.extend(serve_rows(smoke=args.smoke))
 
     if args.obs_out:
         from repro.obs import export as obs_export

@@ -336,7 +336,9 @@ def _solve_lasso_grid(Sigmas, cs, lams, etas, *, iters, use_kernel,
 def solve_lasso_eq2(Sigmas: jnp.ndarray, cs: jnp.ndarray, lam, *,
                     iters: int = 400,
                     beta0: jnp.ndarray | None = None,
-                    lam_max: jnp.ndarray | None = None) -> jnp.ndarray:
+                    lam_max: jnp.ndarray | None = None,
+                    tol=None, check_every: int = 25,
+                    return_iters: bool = False) -> jnp.ndarray:
     """Batched lasso in the PAPER'S eq.-2 convention:
 
         (1/n)||y_t - X_t b||^2 + lam ||b||_1
@@ -349,28 +351,36 @@ def solve_lasso_eq2(Sigmas: jnp.ndarray, cs: jnp.ndarray, lam, *,
     the FISTA iterates (streaming refits restart from the previous
     solution). `lam_max` (m,) are precomputed per-task largest
     eigenvalues; callers that also run the debias solve pass one shared
-    power iteration instead of paying it twice."""
+    power iteration instead of paying it twice.
+
+    `tol=` turns `iters` into an exact CEILING via the engine's
+    chunked-while-loop early exit (prox-gradient KKT residual checked
+    every `check_every` iterations) — this is the latency-budget lever
+    the streaming refit path leans on: a warm-started refit under a tol
+    exits in a fraction of the ceiling, and the ceiling bounds the
+    worst case. `return_iters` also returns the iterations run."""
     m, p = cs.shape
     use_kernel = jax.default_backend() == "tpu"
     block = resolve_block_policy(m, p, 1, cs.dtype, None, use_kernel)
-    out = _solve_lasso_eq2(Sigmas, cs, lam, beta0, lam_max, iters=iters,
-                           use_kernel=use_kernel, block=block)
-    _record_solve("lasso_eq2", iters, iters)
-    return out
+    out, n_iters = _solve_lasso_eq2(Sigmas, cs, lam, beta0, lam_max, tol,
+                                    iters=iters, use_kernel=use_kernel,
+                                    block=block, check_every=check_every)
+    _record_solve("lasso_eq2", n_iters, iters)
+    return (out, n_iters) if return_iters else out
 
 
-@partial(jax.jit, static_argnames=("iters", "use_kernel", "block"))
-def _solve_lasso_eq2(Sigmas, cs, lam, beta0, lam_max, *, iters,
-                     use_kernel, block):
+@partial(jax.jit, static_argnames=("iters", "use_kernel", "block",
+                                   "check_every"))
+def _solve_lasso_eq2(Sigmas, cs, lam, beta0, lam_max, tol, *, iters,
+                     use_kernel, block, check_every):
     if lam_max is None:
         etas = jax.vmap(lasso_stats_step_scale)(Sigmas)
     else:
         etas = 2.0 / jnp.maximum(2.0 * lam_max, 1e-12)
-    out, _ = _solve_lasso_batched(Sigmas, cs, 0.5 * jnp.asarray(lam),
-                                  etas, beta0, None, iters=iters,
-                                  use_kernel=use_kernel, interpret=None,
-                                  block=block, check_every=25)
-    return out
+    return _solve_lasso_batched(Sigmas, cs, 0.5 * jnp.asarray(lam),
+                                etas, beta0, tol, iters=iters,
+                                use_kernel=use_kernel, interpret=None,
+                                block=block, check_every=check_every)
 
 
 def solve_lasso_eq2_grid(Sigmas: jnp.ndarray, cs: jnp.ndarray, lams, *,
@@ -520,26 +530,33 @@ def scaled_identity_m0(Sigmas: jnp.ndarray) -> jnp.ndarray:
 
 def inverse_hessian_batched(Sigmas: jnp.ndarray, mu, iters: int = 600,
                             M0: jnp.ndarray | None = None,
-                            lam_max: jnp.ndarray | None = None
-                            ) -> jnp.ndarray:
+                            lam_max: jnp.ndarray | None = None,
+                            tol=None, check_every: int = 25,
+                            return_iters: bool = False) -> jnp.ndarray:
     """Approximate inverse Ms (m, p, p) of a stack of PSD covariances —
     the Javanmard-Montanari program for all tasks and all p rows as ONE
     multi-RHS batched solve (m*p right-hand sides). `M0` warm-starts the
     solve (e.g. the previous generation's Ms in a streaming refit);
     default is the scaled identity of the single-task solver. `lam_max`
-    (m,) lets callers share one power iteration with the lasso solve."""
+    (m,) lets callers share one power iteration with the lasso solve.
+    `tol=` makes `iters` a ceiling (early exit on the KKT residual,
+    checked every `check_every` iterations) so a warm-started streaming
+    refit pays only the iterations it needs; `return_iters` also
+    returns the iterations run."""
     m, p, _ = Sigmas.shape
     use_kernel = jax.default_backend() == "tpu"
     block = resolve_block_policy(m, p, p, Sigmas.dtype, None, use_kernel)
-    out = _inverse_hessian_batched(Sigmas, mu, M0, lam_max, iters=iters,
-                                   use_kernel=use_kernel, block=block)
-    _record_solve("debias", iters, iters)
-    return out
+    out, n_iters = _inverse_hessian_batched(
+        Sigmas, mu, M0, lam_max, tol, iters=iters,
+        use_kernel=use_kernel, block=block, check_every=check_every)
+    _record_solve("debias", n_iters, iters)
+    return (out, n_iters) if return_iters else out
 
 
-@partial(jax.jit, static_argnames=("iters", "use_kernel", "block"))
-def _inverse_hessian_batched(Sigmas, mu, M0, lam_max, *, iters,
-                             use_kernel, block):
+@partial(jax.jit, static_argnames=("iters", "use_kernel", "block",
+                                   "check_every"))
+def _inverse_hessian_batched(Sigmas, mu, M0, lam_max, tol, *, iters,
+                             use_kernel, block, check_every):
     m, p, _ = Sigmas.shape
     if lam_max is None:
         lam_max = power_iteration_batched(Sigmas)
@@ -547,8 +564,8 @@ def _inverse_hessian_batched(Sigmas, mu, M0, lam_max, *, iters,
     eye = jnp.broadcast_to(jnp.eye(p, dtype=Sigmas.dtype), (m, p, p))
     C0 = scaled_identity_m0(Sigmas) if M0 is None else \
         jnp.swapaxes(M0, -1, -2)
-    Cs, _ = _solve_lasso_batched(Sigmas, eye, mu, etas, C0, None,
-                                 iters=iters, use_kernel=use_kernel,
-                                 interpret=None, block=block,
-                                 check_every=25)
-    return jnp.swapaxes(Cs, -1, -2)
+    Cs, n_iters = _solve_lasso_batched(Sigmas, eye, mu, etas, C0, tol,
+                                       iters=iters, use_kernel=use_kernel,
+                                       interpret=None, block=block,
+                                       check_every=check_every)
+    return jnp.swapaxes(Cs, -1, -2), n_iters

@@ -13,11 +13,13 @@ snapshot with `python -m repro.obs SNAPSHOT.json`. Never record from
 jit-reachable code — lint code RL108 enforces this (DESIGN.md §14).
 """
 from .registry import (  # noqa: F401
+    HIST_SAMPLE_CAP,
     MAX_TRACE_EVENTS,
     Registry,
     counter_total,
     enabled,
     get_registry,
+    hist_quantiles,
     hist_stats,
     inc,
     observe,

@@ -70,6 +70,9 @@ def to_prometheus(snap: dict) -> str:
         lab = _prom_labels(h["labels"])
         for suffix in ("count", "sum", "min", "max"):
             lines.append("%s_%s%s %s" % (base, suffix, lab, h[suffix]))
+        for suffix in ("p50", "p99"):   # windowed quantiles, when
+            if suffix in h:             # samples were retained
+                lines.append("%s_%s%s %s" % (base, suffix, lab, h[suffix]))
     return "\n".join(lines) + ("\n" if lines else "")
 
 
@@ -122,9 +125,10 @@ def summarize(snap: dict, top: int = 20) -> str:
         lines.append("histograms:")
         for h in hists:
             lab = _prom_labels(h["labels"])
+            tail = f" p99={h['p99']:.4g}" if "p99" in h else ""
             lines.append(
                 f"  {h['name']}{lab}: n={h['count']} "
-                f"mean={h['mean']:.4g} max={h['max']:.4g}")
+                f"mean={h['mean']:.4g} max={h['max']:.4g}{tail}")
     dropped = snap.get("dropped_trace_events", 0)
     if dropped:
         lines.append(f"dropped trace events: {dropped}")

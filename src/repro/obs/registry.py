@@ -10,10 +10,13 @@ scrapers). The optional `jax.profiler` bridge lives in
 Semantics (DESIGN.md §14):
 
 * **Counters** are monotonically increasing sums, **gauges** are
-  last-write-wins values, **histograms** keep count/sum/min/max (enough
-  for rates and latency headlines without bucket configuration), and
-  **spans** time a `with` block on the monotonic clock, recording both
-  a `<name>.ms` histogram observation and a Chrome trace event.
+  last-write-wins values, **histograms** keep count/sum/min/max plus a
+  bounded ring of the most recent `HIST_SAMPLE_CAP` raw observations
+  (enough for rates, latency headlines, AND tail quantiles — the
+  serving front's p50/p99 come from `hist_quantiles`, computed over
+  the retained window, without bucket configuration), and **spans**
+  time a `with` block on the monotonic clock, recording both a
+  `<name>.ms` histogram observation and a Chrome trace event.
 * Every metric takes free-form keyword **labels**; a (name, labels)
   pair is one series. Labels must be low-cardinality Python scalars
   (kernel names, route reasons, axis names — never array values).
@@ -41,11 +44,18 @@ from __future__ import annotations
 import os
 import threading
 import time
+from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
 # cap on buffered Chrome trace events; past it, events are dropped and
 # counted (a long-running service must not grow a timeline unbounded)
 MAX_TRACE_EVENTS = 65536
+
+# per-series cap on retained raw observations for quantile estimation:
+# a sliding window of the newest samples (a serving p99 should reflect
+# recent traffic, not the cold-start tail from an hour ago), bounded so
+# a long-running service's memory stays fixed per series
+HIST_SAMPLE_CAP = 4096
 
 MetricKey = Tuple[str, Tuple[Tuple[str, Any], ...]]
 
@@ -59,16 +69,31 @@ def _key(name: str, labels: dict) -> MetricKey:
     return (name, tuple(sorted(labels.items())))
 
 
-class _Hist:
-    """count/sum/min/max summary — bucketless, mergeable, 4 numbers."""
+def _quantile(sorted_vals: List[float], q: float) -> float:
+    """Linear-interpolated quantile of an ascending-sorted list."""
+    if not sorted_vals:
+        raise ValueError("quantile of empty sample set")
+    if len(sorted_vals) == 1:
+        return sorted_vals[0]
+    pos = q * (len(sorted_vals) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = pos - lo
+    return sorted_vals[lo] * (1.0 - frac) + sorted_vals[hi] * frac
 
-    __slots__ = ("count", "total", "min", "max")
+
+class _Hist:
+    """count/sum/min/max summary plus a bounded ring of recent raw
+    samples (newest `HIST_SAMPLE_CAP`) for windowed quantiles."""
+
+    __slots__ = ("count", "total", "min", "max", "samples")
 
     def __init__(self) -> None:
         self.count = 0
         self.total = 0.0
         self.min = float("inf")
         self.max = float("-inf")
+        self.samples: deque = deque(maxlen=HIST_SAMPLE_CAP)
 
     def add(self, value: float) -> None:
         self.count += 1
@@ -77,6 +102,7 @@ class _Hist:
             self.min = value
         if value > self.max:
             self.max = value
+        self.samples.append(value)
 
 
 class _NullSpan:
@@ -220,6 +246,25 @@ class Registry:
                 "min": merged.min, "max": merged.max,
                 "mean": merged.total / merged.count}
 
+    def hist_quantiles(self, name: str, qs=(0.5, 0.99),
+                       **match) -> Optional[dict]:
+        """Windowed quantiles over the retained samples of every
+        histogram series named `name` whose labels contain `match`.
+        Returns {q: value} (linear interpolation between order
+        statistics) or None when no samples are retained. The window is
+        the newest `HIST_SAMPLE_CAP` observations per series — a
+        serving tail estimate, not an all-time one."""
+        want = set(match.items())
+        with self._lock:
+            pooled: List[float] = []
+            for (n, lab), h in self._hists.items():
+                if n == name and want.issubset(lab):
+                    pooled.extend(h.samples)
+        if not pooled:
+            return None
+        pooled.sort()
+        return {q: _quantile(pooled, q) for q in qs}
+
     def trace_events(self) -> List[dict]:
         with self._lock:
             return [dict(ev) for ev in self._events]
@@ -232,11 +277,18 @@ class Registry:
                         for (n, lab), v in sorted(self._counters.items())]
             gauges = [{"name": n, "labels": dict(lab), "value": v}
                       for (n, lab), v in sorted(self._gauges.items())]
-            hists = [{"name": n, "labels": dict(lab), "count": h.count,
-                      "sum": h.total, "min": h.min, "max": h.max,
-                      "mean": h.total / h.count}
-                     for (n, lab), h in sorted(self._hists.items())
-                     if h.count]
+            hists = []
+            for (n, lab), h in sorted(self._hists.items()):
+                if not h.count:
+                    continue
+                entry = {"name": n, "labels": dict(lab), "count": h.count,
+                         "sum": h.total, "min": h.min, "max": h.max,
+                         "mean": h.total / h.count}
+                if h.samples:
+                    srt = sorted(h.samples)
+                    entry["p50"] = _quantile(srt, 0.5)
+                    entry["p99"] = _quantile(srt, 0.99)
+                hists.append(entry)
             return {"enabled": self._enabled, "counters": counters,
                     "gauges": gauges, "histograms": hists,
                     "dropped_trace_events": self._dropped_events}
@@ -288,6 +340,10 @@ def counter_total(name: str, **match) -> float:
 
 def hist_stats(name: str, **match) -> Optional[dict]:
     return _REGISTRY.hist_stats(name, **match)
+
+
+def hist_quantiles(name: str, qs=(0.5, 0.99), **match) -> Optional[dict]:
+    return _REGISTRY.hist_quantiles(name, qs, **match)
 
 
 def reset() -> None:

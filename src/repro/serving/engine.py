@@ -34,7 +34,18 @@ def make_serve_step(cfg: ModelConfig):
 def greedy_generate(params, cfg: ModelConfig, prompt: jnp.ndarray,
                     steps: int, cache_extra: int = 0,
                     frontend: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """Batched greedy decoding. prompt: (B, S) -> (B, S + steps)."""
+    """Batched greedy decoding. prompt: (B, S) -> (B, S + steps).
+
+    The prefill's last logits already yield token 0, so only steps - 1
+    decode iterations run: the scan's stacked pre-update tokens are
+    [tok0 .. tok_{steps-2}] and the final carry is tok_{steps-1} (an
+    earlier version decoded a `steps`-th token only to slice it away).
+    `cache_extra` pads the cache past the written range — decode writes
+    stop at position S + off + steps - 2 — so it never shifts positions
+    or tokens; `steps=0` returns the prompt unchanged (the `[:, :steps]`
+    slice drops tok0, and the prefill still runs for cache warmup
+    parity with the steps > 0 path).
+    """
     B, S = prompt.shape
     off = cfg.n_frontend_tokens if cfg.arch_type == "vlm" and frontend is not None else 0
     cache_len = S + off + steps + cache_extra
@@ -51,6 +62,7 @@ def greedy_generate(params, cfg: ModelConfig, prompt: jnp.ndarray,
         return (nxt, caches), tok
 
     (last, _), toks = jax.lax.scan(body, (tok0, caches),
-                                   jnp.arange(steps, dtype=jnp.int32))
+                                   jnp.arange(max(steps - 1, 0),
+                                              dtype=jnp.int32))
     gen = jnp.concatenate([toks.T, last[:, None]], axis=1)[:, :steps]
     return jnp.concatenate([prompt, gen], axis=1)

@@ -14,6 +14,9 @@ from repro.stream.health import RefitHealth, refit_health
 from repro.stream.refit import (
     RefitInfo, jaccard_support, refit, refit_logistic,
 )
+from repro.stream.serve import (
+    ModelGeneration, ServeResult, ServingFront, bucket_rows,
+)
 from repro.stream.service import StreamingDsmlService
 from repro.stream.state import (
     StreamState, WindowState, ingest, ingest_stats, init_stream_state,
@@ -25,6 +28,7 @@ __all__ = [
     "IngestGuard", "QuarantineRecord",
     "RefitHealth", "refit_health",
     "RefitInfo", "jaccard_support", "refit", "refit_logistic",
+    "ModelGeneration", "ServeResult", "ServingFront", "bucket_rows",
     "StreamingDsmlService",
     "StreamState", "WindowState", "ingest", "ingest_stats",
     "init_stream_state", "init_window", "merge", "window_ingest",

@@ -34,6 +34,10 @@ class RefitInfo(NamedTuple):
     jaccard: jnp.ndarray        # () similarity of new vs previous support
     support_size: jnp.ndarray   # () int32 |S_hat| after thresholding
     generation: jnp.ndarray     # () int32 generation of the NEW state
+    # iterations the two solves actually ran (== the ceilings unless a
+    # tol was set); None on paths that never count (e.g. rollback infos)
+    lasso_iters_run: jnp.ndarray | None = None
+    debias_iters_run: jnp.ndarray | None = None
 
 
 def jaccard_support(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -45,8 +49,8 @@ def jaccard_support(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 
 @partial(jax.jit, static_argnames=("lasso_iters", "debias_iters", "warm"))
 def refit(state: StreamState, lam, mu, Lam, lasso_iters: int = 400,
-          debias_iters: int = 600,
-          warm: bool = True) -> Tuple[StreamState, RefitInfo]:
+          debias_iters: int = 600, warm: bool = True,
+          tol=None) -> Tuple[StreamState, RefitInfo]:
     """One DSML refresh on the state's statistics.
 
     Returns the new state (updated beta/M/support, generation + 1) and
@@ -56,6 +60,13 @@ def refit(state: StreamState, lam, mu, Lam, lasso_iters: int = 400,
     debias M solve from `Ms` (generation 0 falls back to the engine's
     scaled-identity start, selected under jit via the traced
     generation).
+
+    `tol=` turns the iteration counts into CEILINGS: both solves early
+    exit on their KKT residuals, so a warm refit under a tol costs only
+    the iterations the statistics drift actually demands — the latency
+    budget the serving front relies on to keep refits off the predict
+    path. The iterations run come back on the info
+    (`lasso_iters_run`/`debias_iters_run`).
     """
     beta0 = state.beta_local if warm else None
     M0 = None
@@ -63,11 +74,12 @@ def refit(state: StreamState, lam, mu, Lam, lasso_iters: int = 400,
         M0 = jnp.where(state.generation > 0, state.Ms,
                        scaled_identity_m0(state.Sigmas))
     lam_max = power_iteration_batched(state.Sigmas)
-    beta_hat = solve_lasso_eq2(state.Sigmas, state.cs, lam,
-                               iters=lasso_iters, beta0=beta0,
-                               lam_max=lam_max)
-    Ms = inverse_hessian_batched(state.Sigmas, mu, iters=debias_iters,
-                                 M0=M0, lam_max=lam_max)
+    beta_hat, lasso_run = solve_lasso_eq2(
+        state.Sigmas, state.cs, lam, iters=lasso_iters, beta0=beta0,
+        lam_max=lam_max, tol=tol, return_iters=True)
+    Ms, debias_run = inverse_hessian_batched(
+        state.Sigmas, mu, iters=debias_iters, M0=M0, lam_max=lam_max,
+        tol=tol, return_iters=True)
     beta_u = debias_batched(state.Sigmas, state.cs, beta_hat, Ms)
     support = support_from_rows(beta_u.T, Lam)
     beta_tilde = beta_u * support[None, :]
@@ -77,7 +89,9 @@ def refit(state: StreamState, lam, mu, Lam, lasso_iters: int = 400,
     info = RefitInfo(
         jaccard=jaccard_support(support, state.support).astype(state.cs.dtype),
         support_size=jnp.sum(support).astype(jnp.int32),
-        generation=new_state.generation)
+        generation=new_state.generation,
+        lasso_iters_run=jnp.asarray(lasso_run, jnp.int32),
+        debias_iters_run=jnp.asarray(debias_run, jnp.int32))
     return new_state, info
 
 

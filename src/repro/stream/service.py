@@ -26,8 +26,13 @@ Ties the streaming pieces together around one `StreamState`:
                     later ones warm-start both solves (lasso from
                     `beta_local`, debias from `Ms`) with the
                     `warm_*_iters` budgets (default: a quarter);
-    serving         `predict` applies the current `beta_tilde` (always
-                    the last HEALTHY generation);
+    serving         `predict` scores against ONE immutable
+                    `ModelGeneration` snapshot captured per call (always
+                    the last HEALTHY generation) — adoption installs a
+                    new snapshot with a single atomic reference swap, so
+                    a predict racing a refit can never observe a torn or
+                    mixed-generation model; `stream/serve.py` builds the
+                    async microbatched front on the same snapshots;
     persistence     `save`/`load` round-trip the state through
                     `checkpoint/io` (atomic npz; `load` validates
                     (m, p, dtype) compatibility before touching live
@@ -53,6 +58,8 @@ from repro.stream.accumulate import ingest_sharded
 from repro.stream.guard import IngestGuard, _guarded_fold
 from repro.stream.health import RefitHealth, refit_health
 from repro.stream.refit import RefitInfo, jaccard_support, refit
+from repro.stream.serve import ModelGeneration
+from repro.substrate import feed_chunk
 from repro.stream.state import (
     StreamState, init_stream_state, init_window, ingest, window_ingest,
     window_stats,
@@ -88,6 +95,7 @@ class StreamingDsmlService:
                  debias_iters: int = 600,
                  warm_lasso_iters: Optional[int] = None,
                  warm_debias_iters: Optional[int] = None,
+                 refit_tol: Optional[float] = None,
                  chunk_n: Optional[int] = None,
                  guard=True,
                  refit_health_checks: bool = True,
@@ -115,6 +123,11 @@ class StreamingDsmlService:
             is not None else max(lasso_iters // 4, 25)
         self.warm_debias_iters = warm_debias_iters if warm_debias_iters \
             is not None else max(debias_iters // 4, 25)
+        # refit latency budget: with a tol, every iteration count above
+        # becomes a CEILING — the solves early exit on their KKT
+        # residuals, so a warm refit costs what the statistics drift
+        # demands and the ceiling bounds the refit's worst-case latency
+        self.refit_tol = refit_tol if refit_tol is None else float(refit_tol)
         self.refit_every = refit_every
         self.drift_threshold = float(drift_threshold)
         self.max_refit_interval = max_refit_interval \
@@ -152,6 +165,11 @@ class StreamingDsmlService:
         # (repro.testing.faults) swaps this to script divergence; the
         # production path never touches it
         self._refit_impl = refit
+        # the published model: ONE immutable snapshot, replaced only by
+        # whole-reference assignment (atomic under the GIL) at the
+        # closed set of model-changing sites — adoption, load/restore,
+        # and explicit publish_model(). predict never reads live state.
+        self._serving: ModelGeneration = self.publish_model()
 
     # -- ingestion --------------------------------------------------------
 
@@ -198,7 +216,14 @@ class StreamingDsmlService:
             elif self.window is not None:
                 self.window = window_ingest(self.window, X_batch, y_batch)
             elif self.mesh is not None:
-                self.state = ingest_sharded(self.state, X_batch, y_batch,
+                # place the chunk in the accumulator's (task, data)
+                # layout before the fold — per-device transfers through
+                # the substrate feed, no gather, no resharding inside
+                # the compiled worker
+                Xd, yd = feed_chunk(X_batch, y_batch, self.mesh,
+                                    data_axis=self.data_axis,
+                                    task_axis=self.task_axis)
+                self.state = ingest_sharded(self.state, Xd, yd,
                                             self.mesh, decay=self.decay,
                                             data_axis=self.data_axis,
                                             task_axis=self.task_axis)
@@ -252,7 +277,8 @@ class StreamingDsmlService:
                 d_iters = self.debias_iters * esc
             candidate, info = self._refit_impl(
                 self.state, self.lam, self.mu, self.Lam,
-                lasso_iters=l_iters, debias_iters=d_iters, warm=warm)
+                lasso_iters=l_iters, debias_iters=d_iters, warm=warm,
+                tol=self.refit_tol)
             if self.refit_health_checks:
                 health = refit_health(candidate, self.lam,
                                       kkt_ceiling=self.refit_kkt_ceiling,
@@ -262,7 +288,12 @@ class StreamingDsmlService:
             self.last_health = health
             if not health.healthy:
                 return self._rollback(health)
+            # adoption = two atomic reference swaps: the live state for
+            # the ingest loop, then the published snapshot for readers.
+            # A concurrent predict holds whichever snapshot it grabbed —
+            # entirely old or entirely new, never a mixture.
             self.state = candidate
+            self.publish_model()
             drift = 1.0 - float(info.jaccard)
             if warm and self._refit_failures == 0 \
                     and drift <= self.drift_threshold:
@@ -275,6 +306,10 @@ class StreamingDsmlService:
         obs.observe("stream.refit.jaccard", float(info.jaccard))
         obs.observe("stream.refit.support_size", float(info.support_size))
         obs.observe("stream.refit.kkt_residual", health.kkt_residual)
+        if info.lasso_iters_run is not None:
+            obs.observe("stream.refit.lasso_iters", int(info.lasso_iters_run))
+            obs.observe("stream.refit.debias_iters",
+                        int(info.debias_iters_run))
         obs.set_gauge("stream.generation", int(info.generation))
         obs.set_gauge("stream.refit.interval_samples", self._interval)
         obs.set_gauge("stream.refit.failures", 0)
@@ -304,24 +339,85 @@ class StreamingDsmlService:
 
     # -- serving ----------------------------------------------------------
 
-    def predict(self, X: jnp.ndarray) -> jnp.ndarray:
-        """Scores under the current servable model.
+    def publish_model(self) -> ModelGeneration:
+        """Snapshot the current model into a fresh `ModelGeneration` and
+        install it as the published snapshot (one reference assignment —
+        atomic under the GIL). Called automatically at every site where
+        the model can change (adoption, load/restore, construction);
+        code that mutates `state` directly must call it afterwards."""
+        st = self.state  # ONE read: the snapshot's fields stay coherent
+        snap = ModelGeneration(beta_tilde=st.beta_tilde,
+                               support=st.support,
+                               generation=int(st.generation))
+        self._serving = snap
+        return snap
+
+    def serving(self) -> ModelGeneration:
+        """The published model, as one immutable snapshot. Hold it for
+        as long as a unit of work needs model coherence (a predict
+        call, a serving-front microbatch): refits adopting a new
+        generation swap the reference under you without ever mutating
+        the snapshot you hold."""
+        return self._serving
+
+    def _normalize_predict_input(self, X):
+        """The predict input contract, enforced in one place.
+
+        (p,)       one shared-design row       -> (1, p), shared
+        (n, p)     shared design, n rows       -> unchanged, shared
+        (m, n, p)  per-task designs            -> unchanged, per-task
+
+        Returns `(X, shared)`. Anything else — wrong feature count,
+        wrong task count, other ranks — raises instead of silently
+        broadcasting (the old path fed rank-1 inputs straight to the
+        einsum and miscounted their rows as `p`)."""
+        X = jnp.asarray(X)
+        if X.ndim == 1:
+            if X.shape[0] != self.p:
+                raise ValueError(f"rank-1 predict input must be one "
+                                 f"({self.p},) row; got {X.shape}")
+            return X.reshape(1, self.p), True
+        if X.ndim == 2:
+            if X.shape[1] != self.p:
+                raise ValueError(f"shared design must be (n, {self.p}); "
+                                 f"got {X.shape}")
+            return X, True
+        if X.ndim == 3:
+            if X.shape[0] != self.m or X.shape[2] != self.p:
+                raise ValueError(f"per-task designs must be "
+                                 f"({self.m}, n, {self.p}); got {X.shape}")
+            return X, False
+        raise ValueError(f"predict input must be rank 1, 2, or 3; "
+                         f"got rank {X.ndim} {X.shape}")
+
+    def predict(self, X: jnp.ndarray, *,
+                return_generation: bool = False) -> jnp.ndarray:
+        """Scores under the published model.
 
         X (m, n, p) gives per-task designs -> (m, n); X (n, p) is one
-        shared design scored by every task's estimate -> (m, n).
+        shared design scored by every task's estimate -> (m, n); a
+        single row (p,) is scored as a 1-row shared design -> (m, 1).
+
+        Each call captures ONE `ModelGeneration` snapshot and scores
+        the whole input against it — a refit adopting (or rolling
+        back) mid-call cannot tear the model out from under the
+        einsum. `return_generation=True` also returns the generation
+        that scored, so callers can prove which model answered.
 
         The `stream.predict` span times the host-side dispatch (the
         jitted matmul is asynchronous), which is the admission latency
         a serving front would see.
         """
+        X, shared = self._normalize_predict_input(X)
+        snap = self.serving()
         with obs.span("stream.predict"):
-            if X.ndim == 2:
-                out = _predict_shared(self.state.beta_tilde, X)
+            if shared:
+                out = _predict_shared(snap.beta_tilde, X)
             else:
-                out = _predict_tasks(self.state.beta_tilde, X)
+                out = _predict_tasks(snap.beta_tilde, X)
         obs.inc("stream.predict.requests")
         obs.inc("stream.predict.rows", int(X.shape[-2]))
-        return out
+        return (out, snap.generation) if return_generation else out
 
     @property
     def generation(self) -> int:
@@ -392,6 +488,7 @@ class StreamingDsmlService:
             self.window = restored["window"]
         self._since_refit = 0
         self._refit_failures = 0
+        self.publish_model()
 
     def checkpoint(self) -> Optional[str]:
         """Persist the current generation to the crash-safe store
@@ -413,5 +510,6 @@ class StreamingDsmlService:
             self.window = tree["window"]
         self._since_refit = 0
         self._refit_failures = 0
+        self.publish_model()
         obs.set_gauge("stream.generation", self.generation)
         return generation

@@ -9,6 +9,7 @@ from repro.substrate.collectives import (
     all_gather_tasks, all_to_all_experts, psum_stats,
 )
 from repro.substrate.compat import make_mesh, shard_map, use_mesh
+from repro.substrate.feed import chunk_specs, feed_chunk, feed_shards
 from repro.substrate.hostenv import force_host_device_count, host_device_env
 from repro.substrate.mesh import data_model_mesh, data_task_mesh, task_mesh
 from repro.substrate.probes import REPO_ROOT, popen_probe, run_probe
@@ -16,6 +17,7 @@ from repro.substrate.probes import REPO_ROOT, popen_probe, run_probe
 __all__ = [
     "all_gather_tasks", "all_to_all_experts", "psum_stats",
     "make_mesh", "shard_map", "use_mesh",
+    "chunk_specs", "feed_chunk", "feed_shards",
     "force_host_device_count", "host_device_env",
     "data_model_mesh", "data_task_mesh", "task_mesh",
     "REPO_ROOT", "popen_probe", "run_probe",

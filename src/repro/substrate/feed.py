@@ -1,0 +1,123 @@
+"""Feeding streaming minibatches onto a `data x task` mesh.
+
+The sharded ingest worker (`stream.accumulate`) expects its chunk
+already laid out as `P(task, data, None)` / `P(task, data)`. How the
+rows GET there is a substrate concern, and there are two distinct
+paths:
+
+* **`feed_chunk`** — the single-controller path: one resident host
+  array placed with `jax.device_put(x, NamedSharding(...))`. The
+  runtime splits the transfer per device; this is the right call when
+  the whole chunk already lives on the ingest host (tests, benchmarks,
+  single-node deployments).
+
+* **`feed_shards`** — the multi-host idiom: each ingest worker hands
+  over only ITS rows (`(m, n_local, p)` blocks along the data axis),
+  each block is `device_put` onto its own device addressable from this
+  process, and `jax.make_array_from_single_device_arrays` assembles
+  the global array without the rows ever being concatenated on any
+  single host. On one process this runs the same per-shard protocol
+  over local devices — which is exactly what the multi-host tests can
+  exercise under a forced 8-device CPU topology.
+
+Both return arrays the compiled accumulator consumes with zero
+resharding (its `in_specs` match), so ingest cost stays the local
+einsum plus one psum. Byte accounting goes through eager `obs`
+counters (`substrate.feed.bytes`), never from traced code (RL108).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import obs
+
+
+def chunk_specs(data_axis: str = "data",
+                task_axis: str = "task") -> Tuple[P, P]:
+    """The (X, y) partition specs the sharded accumulator ingests:
+    tasks over `task_axis`, rows over `data_axis`, features replicated."""
+    return (P(task_axis, data_axis, None), P(task_axis, data_axis))
+
+
+def _record_feed(nbytes: int, path: str) -> None:
+    if obs.enabled():
+        obs.inc("substrate.feed.bytes", nbytes, path=path)
+        obs.inc("substrate.feed.chunks", path=path)
+
+
+def feed_chunk(X: jnp.ndarray, y: jnp.ndarray, mesh: Mesh,
+               data_axis: str = "data", task_axis: str = "task"
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Place one host-resident chunk X (m, n, p) / y (m, n) onto `mesh`
+    in the accumulator's layout. Requires m and n divisible by the
+    respective mesh axis sizes (the accumulator's own contract)."""
+    spec_X, spec_y = chunk_specs(data_axis, task_axis)
+    Xd = jax.device_put(X, NamedSharding(mesh, spec_X))
+    yd = jax.device_put(y, NamedSharding(mesh, spec_y))
+    _record_feed(Xd.nbytes + yd.nbytes, "chunk")
+    return Xd, yd
+
+
+def feed_shards(X_shards: Sequence, y_shards: Sequence, mesh: Mesh,
+                data_axis: str = "data", task_axis: str = "task"
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Assemble a global chunk from per-worker row blocks.
+
+    `X_shards[i]` is worker i's rows (m, n_i, p) (equal n_i across
+    workers), ordered along the `data_axis`; `y_shards[i]` the matching
+    (m, n_i). Each block is split over the task axis, `device_put` onto
+    the device owning that (data, task) coordinate, and the global
+    (m, n_total, p) array is assembled from the single-device pieces —
+    no host ever holds the concatenated chunk. The result is sharded
+    exactly like `feed_chunk`'s.
+    """
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_data, n_task = axis_sizes[data_axis], axis_sizes[task_axis]
+    if len(X_shards) != n_data or len(y_shards) != n_data:
+        raise ValueError(
+            f"got {len(X_shards)} row blocks for a mesh with "
+            f"{n_data} '{data_axis}' slots (one block per slot)")
+    m, n_local, p = X_shards[0].shape
+    if m % n_task:
+        raise ValueError(f"m={m} tasks not divisible by "
+                         f"{task_axis}={n_task}")
+    m_local = m // n_task
+    spec_X, spec_y = chunk_specs(data_axis, task_axis)
+    sharding_X = NamedSharding(mesh, spec_X)
+    sharding_y = NamedSharding(mesh, spec_y)
+    # device owning (data=d, task=t) in the mesh's device grid; the
+    # mesh axes may be in either order, so index by name
+    ax = {name: i for i, name in enumerate(mesh.axis_names)}
+
+    def dev(d: int, t: int):
+        idx = [0, 0]
+        idx[ax[data_axis]] = d
+        idx[ax[task_axis]] = t
+        return mesh.devices[tuple(idx)]
+
+    pieces_X, pieces_y = [], []
+    nbytes = 0
+    for d in range(n_data):
+        Xb, yb = jnp.asarray(X_shards[d]), jnp.asarray(y_shards[d])
+        if Xb.shape != (m, n_local, p) or yb.shape != (m, n_local):
+            raise ValueError(
+                f"row block {d} has shape {Xb.shape}/{yb.shape}; every "
+                f"block must be ({m}, {n_local}, {p})/({m}, {n_local})")
+        for t in range(n_task):
+            rows = slice(t * m_local, (t + 1) * m_local)
+            px = jax.device_put(Xb[rows], dev(d, t))
+            py = jax.device_put(yb[rows], dev(d, t))
+            nbytes += px.nbytes + py.nbytes
+            pieces_X.append(px)
+            pieces_y.append(py)
+    n_total = n_local * n_data
+    Xg = jax.make_array_from_single_device_arrays(
+        (m, n_total, p), sharding_X, pieces_X)
+    yg = jax.make_array_from_single_device_arrays(
+        (m, n_total), sharding_y, pieces_y)
+    _record_feed(nbytes, "shards")
+    return Xg, yg

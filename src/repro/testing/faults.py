@@ -148,11 +148,12 @@ class DivergenceInjector:
         self.service._refit_impl = self._orig
 
     def _wrapped(self, state, lam, mu, Lam, *, lasso_iters, debias_iters,
-                 warm):
+                 warm, **kw):
         self.calls += 1
         candidate, info = self._orig(state, lam, mu, Lam,
                                      lasso_iters=lasso_iters,
-                                     debias_iters=debias_iters, warm=warm)
+                                     debias_iters=debias_iters, warm=warm,
+                                     **kw)
         if self._armed > 0:
             self._armed -= 1
             self.injected += 1

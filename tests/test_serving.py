@@ -96,3 +96,52 @@ def test_greedy_generate_shapes_and_determinism():
     assert out1.shape == (B, 14)
     np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
     np.testing.assert_array_equal(np.asarray(out1[:, :8]), np.asarray(prompt))
+
+
+def test_greedy_generate_zero_steps_is_identity():
+    """steps=0 must return the prompt unchanged — no decode, no junk
+    column from the prefill's argmax."""
+    cfg = _cfg("granite-3-2b")
+    params = init_params(KEY, cfg)
+    prompt = jax.random.randint(KEY, (B, 8), 0, cfg.vocab)
+    out = greedy_generate(params, cfg, prompt, steps=0)
+    assert out.shape == (B, 8)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(prompt))
+
+
+@pytest.mark.parametrize("extra", [0, 3, 16])
+def test_greedy_generate_cache_extra_invariance(extra):
+    """`cache_extra` only pads the cache past the written range, so it
+    must never change the decoded tokens (the scan writes through
+    position S + steps - 2 and the slack stays untouched)."""
+    cfg = _cfg("granite-3-2b")
+    params = init_params(KEY, cfg)
+    prompt = jax.random.randint(KEY, (B, 8), 0, cfg.vocab)
+    base = greedy_generate(params, cfg, prompt, steps=5)
+    out = greedy_generate(params, cfg, prompt, steps=5, cache_extra=extra)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+
+
+def test_greedy_generate_matches_manual_decode_loop():
+    """The scan must equal an unrolled prefill + per-token decode loop
+    token for token — in particular the LAST token must be a real
+    decoded token, not an artifact of the scan length (the old code ran
+    one extra decode step and always sliced its result away)."""
+    cfg = _cfg("granite-3-2b")
+    params = init_params(KEY, cfg)
+    S0, steps = 8, 5
+    prompt = jax.random.randint(KEY, (B, S0), 0, cfg.vocab)
+
+    logits, caches = forward_prefill(params, cfg, Batch(tokens=prompt),
+                                     cache_len=S0 + steps)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    toks = [tok]
+    for i in range(steps - 1):
+        ld, caches = forward_decode(params, cfg, tok[:, None],
+                                    jnp.asarray(S0 + i, jnp.int32), caches)
+        tok = jnp.argmax(ld[:, -1], axis=-1).astype(jnp.int32)
+        toks.append(tok)
+    manual = np.stack([np.asarray(t) for t in toks], axis=1)
+
+    out = greedy_generate(params, cfg, prompt, steps=steps)
+    np.testing.assert_array_equal(np.asarray(out[:, S0:]), manual)
