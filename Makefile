@@ -18,11 +18,16 @@ test: lint
 	$(PY) tools/chaos.py
 
 # repo-native invariant linter + static Pallas tiling/VMEM contract
-# checker (DESIGN.md section 13 for the RLxxx codes). The --cache leg
-# validates the committed autotune cache without importing jax; it is a
-# no-op when .cache/autotune.json does not exist.
+# checker + concurrency contract checker (DESIGN.md sections 13 and 17
+# for the RLxxx codes). The full run already includes all three
+# engines; the explicit --concurrency and --cache legs re-run the two
+# stdlib-only engines standalone, proving each stays importable and
+# clean with no jax in the environment (tests/test_invariants.py pins
+# the no-jax property with subprocess probes). --cache is a no-op when
+# .cache/autotune.json does not exist.
 lint:
 	$(PY) -m tools.repro_lint src benchmarks
+	$(PY) -m tools.repro_lint --concurrency src benchmarks
 	$(PY) -m tools.repro_lint --cache
 
 # statistical correctness tier alone: the paper's claims (exact support

@@ -142,7 +142,24 @@ class Registry:
     """One process-local metric store. Library code uses the module
     globals below (`inc`/`set_gauge`/`observe`/`span`); constructing a
     private `Registry` directly is for tests and the disabled-mode
-    overhead bench."""
+    overhead bench.
+
+    Thread-sharing contract (`_SYNC_POLICY`, checked by repro_lint
+    RL4xx): every mutable store is touched only under `_lock`;
+    `_enabled` is set once at construction and read lock-free
+    thereafter. RL404 additionally proves no blocking call ever runs
+    while `_lock` is held, so a recording thread can never stall the
+    serving worker on telemetry.
+    """
+
+    _SYNC_POLICY = {
+        "*": "immutable-after-init",
+        "_counters": "lock:_lock",
+        "_gauges": "lock:_lock",
+        "_hists": "lock:_lock",
+        "_events": "lock:_lock",
+        "_dropped_events": "lock:_lock",
+    }
 
     def __init__(self, enabled: bool = True) -> None:
         self._enabled = bool(enabled)

@@ -102,17 +102,36 @@ class ServingFront:
     untouched and every result in a batch is scored by the same
     generation. `predict(x)` is the synchronous convenience wrapper
     (submit + wait). The front is also a context manager.
+
+    Lifecycle contract (`_SYNC_POLICY`, checked by repro_lint RL4xx):
+    `start()`/`stop()` are driver-thread calls. Each worker owns its
+    OWN stop event (passed at spawn, never read back through `self`),
+    so a timed-out `stop()` followed by `start()` can never hand a
+    half-stopped worker a cleared flag. `stop()` returns False and
+    touches nothing when the worker outlives the join timeout — the
+    live worker still owns the queue, the carry slot, and every
+    admitted future; `_fail_pending` runs only after thread death
+    proves exclusive ownership transferred back.
     """
+
+    _SYNC_POLICY = {
+        "*": "immutable-after-init",
+        "_worker": "atomic-publish:start,stop",
+        "_stop": "atomic-publish:start",
+        "_carry": "worker-only:_run,_fail_pending",
+    }
 
     def __init__(self, service, *, max_batch: int = 64,
                  max_delay_ms: float = 2.0,
-                 min_bucket: int = MIN_BUCKET_ROWS):
+                 min_bucket: int = MIN_BUCKET_ROWS,
+                 poll_s: float = 0.1):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.service = service
         self.max_batch = int(max_batch)
         self.max_delay_s = float(max_delay_ms) / 1e3
         self.min_bucket = int(min_bucket)
+        self.poll_s = float(poll_s)  # idle wake cadence of the worker
         self._q: "queue.Queue[Optional[_Request]]" = queue.Queue()
         self._carry: Optional[_Request] = None  # overflow from last drain
         self._worker: Optional[threading.Thread] = None
@@ -121,24 +140,48 @@ class ServingFront:
     # -- lifecycle --------------------------------------------------------
 
     def start(self) -> "ServingFront":
-        if self._worker is not None and self._worker.is_alive():
-            return self
-        self._stop.clear()
-        self._worker = threading.Thread(
-            target=self._run, name="repro-serving-front", daemon=True)
-        self._worker.start()
+        w = self._worker
+        if w is not None:
+            if w.is_alive() and not self._stop.is_set():
+                return self
+            # a previous stop() timed out (or the worker crashed): wait
+            # the old worker out for real before spawning a new one, so
+            # two workers never race on the same queue
+            w.join()
+            self._fail_pending()
+        stop = threading.Event()
+        worker = threading.Thread(
+            target=self._run, args=(stop,), name="repro-serving-front",
+            daemon=True)
+        self._stop = stop
+        self._worker = worker
+        worker.start()
         return self
 
-    def stop(self, timeout: float = 5.0) -> None:
-        """Drain-and-stop: already-queued requests still resolve."""
-        if self._worker is None:
-            return
+    def stop(self, timeout: float = 5.0) -> bool:
+        """Drain-and-stop: already-admitted requests still resolve (the
+        worker sweeps the queue before exiting). Returns True once the
+        worker is confirmed dead; False when it outlived `timeout`, in
+        which case NOTHING is reclaimed — the worker still owns the
+        queue and every pending future, and a later stop()/start()
+        waits it out."""
+        w = self._worker
+        if w is None:
+            return True
         self._stop.set()
         self._q.put(None)            # wake the worker out of its drain
-        self._worker.join(timeout)
+        w.join(timeout)
+        if w.is_alive():
+            return False
         self._worker = None
-        # resolve anything still queued after the worker exited, so no
-        # caller blocks forever on a future the worker abandoned
+        self._fail_pending()
+        return True
+
+    def _fail_pending(self) -> None:
+        """Fail anything admitted after the dead worker's final sweep.
+        Callers must have proven the worker dead (join() returned and
+        is_alive() is False) — thread death is the happens-before edge
+        that makes this single-owner code."""
         leftovers: List[Optional[_Request]] = []
         if self._carry is not None:
             leftovers.append(self._carry)
@@ -165,7 +208,8 @@ class ServingFront:
     def submit(self, x) -> Future:
         """Admit one shared-design request: x (p,) is one row, (rows, p)
         a small block. Returns a `Future[ServeResult]`."""
-        if self._worker is None or not self._worker.is_alive():
+        w = self._worker
+        if w is None or not w.is_alive():
             raise RuntimeError("serving front is not running "
                                "(call start() or use as a context manager)")
         p = self.service.p
@@ -197,7 +241,7 @@ class ServingFront:
             first, self._carry = self._carry, None
         else:
             try:
-                first = self._q.get(timeout=0.1)
+                first = self._q.get(timeout=self.poll_s)
             except queue.Empty:
                 return []
             if first is None:
@@ -257,21 +301,58 @@ class ServingFront:
         obs.observe("serve.batch_rows", rows)
         obs.observe("serve.batch_fill", rows / self.max_batch)
 
-    def _run(self) -> None:
-        while not self._stop.is_set():
-            batch = self._drain()
-            if not batch:
-                continue
+    def _drain_remaining(self) -> List[_Request]:
+        """Non-blocking gather for the worker's final sweep: carry slot
+        first, then whatever is already queued, skipping stop
+        sentinels, respecting max_batch (overflow re-parks in the
+        carry for the next sweep iteration)."""
+        batch: List[_Request] = []
+        rows = 0
+        if self._carry is not None:
+            first, self._carry = self._carry, None
+            batch.append(first)
+            rows = first.X.shape[0]
+        while rows < self.max_batch:
             try:
-                self._process(batch)
-            except Exception as e:  # noqa: BLE001 - recorded + propagated
-                # a poisoned batch must not kill the worker: the error
-                # goes to the batch's callers (their futures) and to
-                # telemetry, and the loop keeps serving
-                obs.inc("serve.errors", kind=type(e).__name__)
-                for req in batch:
-                    if not req.future.done():
-                        req.future.set_exception(e)
+                req = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if req is None:
+                continue
+            if rows + req.X.shape[0] > self.max_batch:
+                self._carry = req
+                break
+            batch.append(req)
+            rows += req.X.shape[0]
+        return batch
+
+    def _process_safe(self, batch: Sequence[_Request]) -> None:
+        try:
+            self._process(batch)
+        except Exception as e:  # noqa: BLE001 - recorded + propagated
+            # a poisoned batch must not kill the worker: the error
+            # goes to the batch's callers (their futures) and to
+            # telemetry, and the loop keeps serving
+            obs.inc("serve.errors", kind=type(e).__name__)
+            for req in batch:
+                if not req.future.done():
+                    req.future.set_exception(e)
+
+    def _run(self, stop: threading.Event) -> None:
+        # `stop` is THIS worker's own event, bound at spawn: the worker
+        # never reads self._stop, so a later start() publishing a fresh
+        # event cannot un-stop a half-stopped worker
+        while not stop.is_set():
+            batch = self._drain()
+            if batch:
+                self._process_safe(batch)
+        # final sweep: everything admitted before the stop still
+        # resolves (drain-and-stop), batch by batch
+        while True:
+            batch = self._drain_remaining()
+            if not batch:
+                break
+            self._process_safe(batch)
 
     # -- introspection ----------------------------------------------------
 

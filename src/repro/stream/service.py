@@ -82,7 +82,40 @@ def _predict_shared(beta_tilde: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
 
 
 class StreamingDsmlService:
-    """Online DSML over continuously arriving multi-task traffic."""
+    """Online DSML over continuously arriving multi-task traffic.
+
+    Thread-sharing contract (`_SYNC_POLICY`, checked by repro_lint
+    RL4xx): all mutation — ingest/refit/rollback/load/restore — belongs
+    to ONE driver thread; its public entry points are the `worker-only`
+    roots below. Reader threads (predict, the serving front) touch
+    only `_serving`, which is republished exclusively by whole-object
+    atomic reference swap inside `publish_model` — so a reader can race
+    any number of refits and never observe a torn model. `_refit_impl`
+    is the fault-injection seam (repro.testing.faults) and is likewise
+    swapped only by whole-reference assignment.
+    """
+
+    _SYNC_POLICY = {
+        "*": "immutable-after-init",
+        "state": "worker-only:ingest,refit,load,restore,save,"
+                 "checkpoint,generation,samples_seen",
+        "window": "worker-only:ingest,refit,load,restore,save,"
+                  "checkpoint,generation,samples_seen",
+        "_interval": "worker-only:ingest,refit,load,restore,save,"
+                     "checkpoint,generation,samples_seen",
+        "_since_refit": "worker-only:ingest,refit,load,restore,save,"
+                        "checkpoint,generation,samples_seen",
+        "_refit_failures": "worker-only:ingest,refit,load,restore,save,"
+                           "checkpoint,generation,samples_seen",
+        "rollbacks": "worker-only:ingest,refit,load,restore,save,"
+                     "checkpoint,generation,samples_seen",
+        "last_info": "worker-only:ingest,refit,load,restore,save,"
+                     "checkpoint,generation,samples_seen",
+        "last_health": "worker-only:ingest,refit,load,restore,save,"
+                       "checkpoint,generation,samples_seen",
+        "_refit_impl": "atomic-publish",
+        "_serving": "atomic-publish:publish_model",
+    }
 
     def __init__(self, m: int, p: int, *, lam, mu, Lam,
                  dtype=jnp.float32,

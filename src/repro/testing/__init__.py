@@ -1,17 +1,22 @@
 """Test-support utilities shipped inside the package.
 
 `repro.testing.faults` is the deterministic fault-injection harness the
-chaos tier (`tests/test_chaos.py`, `tools/chaos.py`) drives; it lives
-under `src/` (not `tests/`) so out-of-tree consumers can chaos-test
-their own deployments of the streaming service.
+chaos tier (`tests/test_chaos.py`, `tools/chaos.py`) drives;
+`repro.testing.interleave` is the deterministic thread-interleaving
+harness the concurrency contract tier (`tests/test_interleave.py`,
+DESIGN.md §17) drives. Both live under `src/` (not `tests/`) so
+out-of-tree consumers can chaos-test and race-test their own
+deployments of the streaming service.
 """
 from repro.testing.faults import (
     FaultEvent, FaultSchedule, DivergenceInjector, apply_batch_fault,
     build_schedule, make_clean_batch, truncate_file,
 )
+from repro.testing.interleave import Gates, InterleaveScheduler, instrument
 
 __all__ = [
     "FaultEvent", "FaultSchedule", "DivergenceInjector",
     "apply_batch_fault", "build_schedule", "make_clean_batch",
     "truncate_file",
+    "Gates", "InterleaveScheduler", "instrument",
 ]

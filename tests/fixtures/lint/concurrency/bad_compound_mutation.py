@@ -1,0 +1,43 @@
+"""Fixture: RL402 on in-place mutation and policy-breaking writes.
+
+Four findings: compound (`+=`) and subscript mutation of an
+atomic-publish attribute (in-place edits are visible to readers
+mid-edit — atomic publication means building a NEW value and swapping
+the reference), a post-init write to an immutable-after-init
+attribute, and an unlocked touch of a lock-disciplined attribute. The
+locked access in `record` must NOT fire.
+"""
+import threading
+
+
+class Mutator:
+    _SYNC_POLICY = {
+        "*": "immutable-after-init",
+        "_snap": "atomic-publish:publish",
+        "_counts": "lock:_lock",
+    }
+
+    def __init__(self):
+        self._snap = {}
+        self._counts = {}
+        self._lock = threading.Lock()
+        self.cfg = "fixed"
+
+    def publish(self, snapshot):
+        self._snap = snapshot                   # clean: allowed site
+
+    def patch(self, key, value):
+        self._snap[key] = value                 # RL402: subscript mutation
+
+    def grow(self, delta):
+        self._snap += delta                     # RL402: compound mutation
+
+    def reconfigure(self, cfg):
+        self.cfg = cfg                          # RL402: immutable write
+
+    def record(self, key):
+        with self._lock:
+            self._counts[key] = 1               # clean: lock held
+
+    def peek(self, key):
+        return self._counts.get(key, 0)         # RL402: lock not held

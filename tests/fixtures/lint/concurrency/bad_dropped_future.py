@@ -1,0 +1,29 @@
+"""Fixture: RL405 — futures with an exit path that strands a waiter.
+
+Two findings: a future that is never resolved, returned, or handed
+off at all, and a validation `raise` sitting between a future's
+creation and its first handoff. `clean` validates BEFORE minting the
+future (the serving-front `submit` pattern) and must NOT fire.
+"""
+from concurrent.futures import Future
+
+
+def lost(compute):
+    fut = Future()                              # RL405: never handed off
+    compute()
+
+
+def raises_between(q, x):
+    fut = Future()
+    if x < 0:
+        raise ValueError("bad request")         # RL405: fut stranded
+    q.put((x, fut))
+    return fut
+
+
+def clean(q, x):
+    if x < 0:
+        raise ValueError("bad request")
+    fut = Future()
+    q.put((x, fut))
+    return fut

@@ -1,0 +1,41 @@
+"""Fixture: RL404 — blocking calls while a declared lock is held.
+
+Four findings under `with self._lock`: an engine solve (`refit`), a
+timeout-less `Future.result()`, a timeout-less `Queue.get()`, and a
+timeout-less `join()` — each parks the lock holder on another thread's
+progress, so every contender stalls with it. The timeout-bounded
+variants in `bounded` must NOT fire.
+"""
+import queue
+import threading
+
+
+class LockedDriver:
+    _SYNC_POLICY = {
+        "*": "immutable-after-init",
+        "_state": "lock:_lock",
+    }
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._state = {}
+        self._q = queue.Queue()
+
+    def refit(self):
+        return {}
+
+    def refresh(self, fut, worker):
+        with self._lock:
+            self._state = self.refit()          # RL404: solve under lock
+            value = fut.result()                # RL404: unbounded wait
+            item = self._q.get()                # RL404: unbounded get
+            worker.join()                       # RL404: unbounded join
+            return value, item
+
+    def bounded(self, fut, worker):
+        with self._lock:
+            self._state = {}
+            value = fut.result(1.0)             # clean: bounded
+            item = self._q.get(timeout=1.0)     # clean: bounded
+            worker.join(1.0)                    # clean: bounded
+            return value, item

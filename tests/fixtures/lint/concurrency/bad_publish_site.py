@@ -1,0 +1,32 @@
+"""Fixture: RL402 on atomic-publish site discipline.
+
+`_model` may only be published from `publish` and `bump` (plus
+`__init__`). Two findings: an assignment from outside the closed site
+set, and a read-modify-write at an allowed site (the read and the
+publish are two steps — a racing reader can interleave between them).
+The clean publish in `publish()` must NOT fire.
+"""
+import threading
+
+
+class Publisher:
+    _SYNC_POLICY = {
+        "*": "immutable-after-init",
+        "_model": "atomic-publish:publish,bump",
+    }
+
+    def __init__(self):
+        self._model = 0
+        self._stopped = threading.Event()
+
+    def publish(self, snapshot):
+        self._model = snapshot                  # clean: allowed site
+
+    def bump(self):
+        self._model = self._model + 1           # RL402: RMW at a site
+
+    def sneak(self, snapshot):
+        self._model = snapshot                  # RL402: not a site
+
+    def read(self):
+        return self._model                      # clean: reads are free

@@ -1,0 +1,39 @@
+"""Fixture: RL401 — shared state without a declared sync policy.
+
+Three violation shapes, one finding each:
+* a thread-spawning class with no `_SYNC_POLICY` at all;
+* a declared class assigning an attribute its policy map does not
+  cover (and no `"*"` default);
+* a policy string the grammar does not recognize.
+"""
+import threading
+
+
+class SpawnsWithoutPolicy:                      # RL401: no declaration
+    def __init__(self):
+        self._result = None
+
+    def start(self):
+        threading.Thread(target=self._work).start()
+
+    def _work(self):
+        self._result = 42
+
+
+class UncoveredAttribute:
+    _SYNC_POLICY = {
+        "_a": "immutable-after-init",
+    }
+
+    def __init__(self):
+        self._a = 1
+        self._b = 2                             # RL401: not covered, no "*"
+
+
+class MalformedPolicy:
+    _SYNC_POLICY = {
+        "_x": "quantum-entangled",              # RL401: unknown grammar
+    }
+
+    def __init__(self):
+        self._x = 0

@@ -1,0 +1,44 @@
+"""Fixture: RL403 — worker-only state touched from a public method.
+
+A distilled copy of the pre-fix `ServingFront.stop()` bug: `_carry` is
+owned by the worker's drain loop, but `stop()` reads it and clears it
+while the worker may still be running. Two findings (the read in the
+condition, the clearing write). The worker-side touches in `_run` and
+its callee `_drain` must NOT fire — they sit inside the declared
+entry's call graph.
+"""
+import queue
+import threading
+
+
+class Front:
+    _SYNC_POLICY = {
+        "*": "immutable-after-init",
+        "_worker": "atomic-publish:start,stop",
+        "_carry": "worker-only:_run",
+    }
+
+    def __init__(self):
+        self._q = queue.Queue()
+        self._carry = None
+        self._worker = None
+
+    def start(self):
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    def stop(self):
+        if self._carry is not None:             # RL403: racing read
+            self._carry = None                  # RL403: racing write
+
+    def _drain(self):
+        if self._carry is not None:             # clean: in worker graph
+            item, self._carry = self._carry, None
+            return item
+        return self._q.get(timeout=0.1)
+
+    def _run(self):
+        while True:
+            item = self._drain()
+            if item is None:
+                return

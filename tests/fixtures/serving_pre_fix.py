@@ -1,0 +1,70 @@
+"""Executable fixture: the PR-9 `ServingFront` lifecycle, pre-fix.
+
+`PreFixServingFront` overrides start/stop/_run with their original
+PR-9 bodies, preserving both real bugs this PR fixed:
+
+* `stop()` clears `self._worker`, reads/clears `_carry`, drains the
+  queue, and fails futures UNCONDITIONALLY after `join(timeout)` —
+  even when the join timed out and the worker is still alive and
+  resolving those same futures;
+* `start()` reuses one shared `threading.Event` via `clear()`, so
+  restarting after a timed-out stop un-stops the zombie worker (and
+  spawns a second worker racing it on the same queue).
+
+`tests/test_interleave.py` replays the race deterministically on this
+class and proves the fixed parent coherent under the same schedule;
+`tests/test_invariants.py` pins that the static checker (RL4xx) flags
+this file's stop() as the violation it is.
+"""
+import queue
+import threading
+from typing import List, Optional
+
+from repro.stream.serve import ServingFront, _Request
+
+
+class PreFixServingFront(ServingFront):
+
+    _SYNC_POLICY = {
+        "*": "immutable-after-init",
+        "_worker": "atomic-publish:start,stop",
+        "_stop": "atomic-publish:start",
+        "_carry": "worker-only:_run",
+    }
+
+    def start(self) -> "PreFixServingFront":
+        if self._worker is not None and self._worker.is_alive():
+            return self
+        self._stop.clear()
+        self._worker = threading.Thread(
+            target=self._run, name="repro-serving-front", daemon=True)
+        self._worker.start()
+        return self
+
+    def stop(self, timeout: float = 5.0) -> None:
+        if self._worker is None:
+            return
+        self._stop.set()
+        self._q.put(None)
+        self._worker.join(timeout)
+        self._worker = None
+        leftovers: List[Optional[_Request]] = []
+        if self._carry is not None:
+            leftovers.append(self._carry)
+            self._carry = None
+        while True:
+            try:
+                leftovers.append(self._q.get_nowait())
+            except queue.Empty:
+                break
+        for req in leftovers:
+            if req is not None and not req.future.done():
+                req.future.set_exception(
+                    RuntimeError("serving front stopped"))
+
+    def _run(self, stop: Optional[threading.Event] = None) -> None:
+        while not self._stop.is_set():
+            batch = self._drain()
+            if not batch:
+                continue
+            self._process_safe(batch)

@@ -1,0 +1,286 @@
+"""Concurrency-contract tier: deterministic interleaving tests.
+
+The static half of the contract lives in `tools/repro_lint/
+concurrency.py` (RL4xx, pinned in test_invariants.py); this file is
+the dynamic half (DESIGN.md §17):
+
+* replay the REAL pre-fix `ServingFront.stop()`/worker race on the
+  preserved old lifecycle bodies (`tests/fixtures/serving_pre_fix.py`)
+  as one exact gated schedule — no sleeps, no luck — showing a live
+  worker's future being failed under it and a second worker spawned
+  against the un-stopped zombie;
+* run the SAME schedule against the fixed front and prove every
+  admitted request resolves, on exactly one worker, with fresh
+  lifecycle state per start;
+* sweep 200 seeded adversarial schedules (scheduler-forced context
+  switches at every `_worker`/`_stop`/`_carry` touch) and require
+  bitwise-coherent results: every future either resolves to the
+  published generation's exact scores or fails with the stop error —
+  never a hang, never a torn result.
+"""
+from __future__ import annotations
+
+import importlib.util
+import random
+import threading
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.stream.serve import ModelGeneration, ServeResult, ServingFront
+from repro.stream.service import _predict_shared
+from repro.testing import Gates, InterleaveScheduler, instrument
+
+REPO = Path(__file__).resolve().parents[1]
+
+M, P, GENERATION = 3, 5, 7
+
+
+def _load_pre_fix_front():
+    path = REPO / "tests" / "fixtures" / "serving_pre_fix.py"
+    spec = importlib.util.spec_from_file_location("serving_pre_fix", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.PreFixServingFront
+
+
+class _TinyService:
+    """The minimal `.p` + `.serving()` surface `ServingFront` needs,
+    publishing one fixed real `ModelGeneration`. With `gates`, every
+    `serving()` call parks at the named gate so a test can hold the
+    worker mid-`_process` at an exact, named point."""
+
+    def __init__(self, gates: Gates | None = None, gate: str = "serving"):
+        beta = jnp.asarray(
+            np.arange(M * P, dtype=np.float32).reshape(M, P) * 0.1 + 1.0)
+        support = jnp.ones((P,), dtype=bool)
+        self.p = P
+        self._snap = ModelGeneration(beta, support, GENERATION)
+        self._gates = gates
+        self._gate = gate
+
+    def serving(self) -> ModelGeneration:
+        if self._gates is not None:
+            self._gates.reach(self._gate)
+        return self._snap
+
+
+X0 = np.linspace(-1.0, 1.0, P).astype(np.float32)
+
+
+def _reference_column(svc: _TinyService) -> np.ndarray:
+    """The exact (m, 1) scores a single-row X0 request must carry: in
+    the `"np,tp->tn"` einsum each output column depends only on its own
+    input row, and every microbatch of X0 rows pads to the same (8, P)
+    shape — so this one column is the bitwise oracle for EVERY request
+    in the sweep, whatever batch it landed in."""
+    X = np.zeros((8, P), dtype=np.float32)
+    X[0] = X0
+    return np.asarray(_predict_shared(svc._snap.beta_tilde,
+                                      jnp.asarray(X)))[:, :1]
+
+
+# --- the pre-fix race, replayed exactly ------------------------------------
+
+def test_pre_fix_stop_race_replays_deterministically():
+    """One gated schedule, zero randomness: submit A (worker parks
+    mid-batch), submit B, stop with a too-short timeout, restart. The
+    PR-9 lifecycle then exhibits all three bug symptoms at once."""
+    PreFix = _load_pre_fix_front()
+    gates = Gates()
+    svc = _TinyService(gates=gates)
+    front = PreFix(svc, max_batch=1, max_delay_ms=0.5, poll_s=0.01)
+
+    front.start()
+    zombie = front._worker
+    ev0 = front._stop
+    fut_a = front.submit(X0)
+    gates.wait_reached("serving")      # worker is parked inside batch A
+    fut_b = front.submit(X0)           # queued behind the parked batch
+
+    front.stop(timeout=0.05)           # join expires: worker still alive
+
+    # symptom 1: B was failed even though a live worker owned the queue
+    assert isinstance(fut_b.exception(timeout=1), RuntimeError)
+    # symptom 2: the handle was dropped while the worker was alive...
+    assert front._worker is None and zombie.is_alive()
+
+    front.start()                      # ...so start() spawns a SECOND
+    second = front._worker             # worker against the zombie
+    assert second is not zombie and second.is_alive()
+    # symptom 3: start() cleared the SHARED stop event out from under
+    # the half-stopped zombie
+    assert front._stop is ev0 and not ev0.is_set()
+
+    gates.release("serving")
+    # the zombie finishes batch A fine — and then keeps serving,
+    # because the flag that told it to stop was cleared
+    res = fut_a.result(timeout=5)
+    assert res.generation == GENERATION
+    zombie.join(timeout=0.2)
+    assert zombie.is_alive(), "pre-fix zombie must outlive its stop()"
+    assert second.is_alive()           # two workers race one queue
+
+    # cleanup: stop both workers for real
+    ev0.set()
+    front._q.put(None)
+    front._q.put(None)
+    zombie.join(5)
+    second.join(5)
+    assert not zombie.is_alive() and not second.is_alive()
+
+
+def test_fixed_front_survives_the_same_schedule():
+    """The exact schedule above, on the fixed front: the timed-out
+    stop() reclaims nothing, B still resolves (drain-and-stop), the
+    restart waits the old worker out and mints fresh lifecycle state,
+    and exactly one worker remains."""
+    gates = Gates()
+    svc = _TinyService(gates=gates)
+    front = ServingFront(svc, max_batch=1, max_delay_ms=0.5, poll_s=0.01)
+    ref = _reference_column(svc)
+
+    front.start()
+    zombie = front._worker
+    ev0 = front._stop
+    fut_a = front.submit(X0)
+    gates.wait_reached("serving")
+    fut_b = front.submit(X0)
+
+    assert front.stop(timeout=0.05) is False
+    # nothing reclaimed under a live worker: handle kept, B untouched,
+    # the worker's own (set) stop event left in place
+    assert front._worker is zombie
+    assert not fut_b.done()
+    assert front._stop is ev0 and ev0.is_set()
+
+    # two gate passes: batch A, then B via the worker's final sweep
+    gates.release("serving", 2)
+
+    front.start()                      # joins the zombie out, then spawns
+    assert not zombie.is_alive()
+    assert front._worker is not zombie and front._worker.is_alive()
+    # fresh lifecycle state: new event published, the old one still set
+    assert front._stop is not ev0 and ev0.is_set()
+    assert not front._stop.is_set()
+
+    # BOTH admitted requests resolved, bitwise against the oracle
+    for fut in (fut_a, fut_b):
+        res: ServeResult = fut.result(timeout=5)
+        assert res.generation == GENERATION
+        np.testing.assert_array_equal(res.scores, ref)
+
+    assert front.stop() is True
+    assert front._worker is None
+
+
+def test_stopped_front_rejects_new_submissions():
+    svc = _TinyService()
+    front = ServingFront(svc, max_batch=1, poll_s=0.01)
+    front.start()
+    assert front.stop() is True
+    with pytest.raises(RuntimeError, match="not running"):
+        front.submit(X0)
+
+
+# --- the harness itself -----------------------------------------------------
+
+def test_gates_timeout_is_loud():
+    gates = Gates()
+    with pytest.raises(TimeoutError, match="never released"):
+        gates.reach("nobody-home", timeout=0.01)
+
+
+def test_scheduler_replays_its_decisions():
+    """Same seed, same yield sequence -> same schedule decisions; a
+    different seed diverges. (Idents differ across runs; the DECISION
+    SEQUENCE — which position in the ring got the token — is what must
+    replay.)"""
+    def decisions(seed: int):
+        sched = InterleaveScheduler(seed, max_wait_s=0.01)
+        sched.register()
+        done = threading.Event()
+        go = threading.Event()
+
+        def sidekick():
+            go.wait()
+            while not done.is_set():
+                sched.yield_point("side")
+        # two sidekicks, so each yield is a real 2-way seeded choice;
+        # main registers them in a FIXED order (ring order is part of
+        # what the seed replays) before letting them run
+        ts = [threading.Thread(target=sidekick, daemon=True)
+              for _ in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            sched.register(t)
+        go.set()
+        order = {threading.get_ident(): 0}
+        for i, t in enumerate(ts):
+            order[t.ident] = i + 1
+        for _ in range(20):
+            sched.yield_point("main")
+        done.set()
+        sched.close()
+        for t in ts:
+            t.join(5)
+        return [(tag, order[ident]) for tag, ident in sched.schedule
+                if tag == "main"]
+
+    a, b = decisions(1234), decisions(1234)
+    assert a == b and len(a) == 20
+    assert decisions(99) != a
+
+
+# --- seeded adversarial sweep ----------------------------------------------
+
+@pytest.mark.parametrize("seed_block", range(8))
+def test_seeded_schedules_stay_bitwise_coherent(seed_block):
+    """200 seeded schedules (25 per parametrized block), each forcing
+    context switches at every `_worker`/`_stop`/`_carry` touch while a
+    seeded op script submits, stops, and restarts the front. Invariant:
+    every admitted future terminates, and terminates EITHER with the
+    stop error OR with bitwise-exact scores under the published
+    generation — no hangs, no torn reads, no cross-generation mixes."""
+    svc = _TinyService()
+    ref = _reference_column(svc)
+
+    for seed in range(seed_block * 25, (seed_block + 1) * 25):
+        sched = InterleaveScheduler(seed, max_wait_s=0.02)
+        Front = instrument(ServingFront, ("_worker", "_stop", "_carry"),
+                           sched)
+        front = Front(svc, max_batch=4, max_delay_ms=0.5, poll_s=0.005)
+        sched.register()
+        rng = random.Random(seed)
+        futures = []
+        front.start()
+        for _ in range(8):
+            op = rng.choice(("submit", "submit", "submit", "stop",
+                             "start"))
+            if op == "submit":
+                try:
+                    futures.append(front.submit(X0))
+                except RuntimeError:
+                    pass               # front stopped — legal refusal
+            elif op == "stop":
+                front.stop(timeout=rng.choice((0.0, 0.01)))
+            else:
+                front.start()
+        sched.close()
+        while front.stop(timeout=1.0) is False:
+            pass
+        assert front._worker is None
+
+        for fut in futures:
+            exc = fut.exception(timeout=5)   # also proves it terminated
+            if exc is not None:
+                assert isinstance(exc, RuntimeError), (seed, exc)
+                assert "serving front stopped" in str(exc)
+                continue
+            res: ServeResult = fut.result()
+            assert res.generation == GENERATION, seed
+            np.testing.assert_array_equal(res.scores, ref,
+                                          err_msg=f"seed={seed}")

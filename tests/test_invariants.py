@@ -2,10 +2,10 @@
 
 Two halves:
 
-* **Self-hosting** — run both engines over `src/` and `benchmarks/`
-  exactly as `make lint` does and require zero findings. Any new
-  violation of a standing invariant (DESIGN.md section 13) fails the
-  suite, not just the standalone lint target.
+* **Self-hosting** — run all three engines over `src/` and
+  `benchmarks/` exactly as `make lint` does and require zero findings.
+  Any new violation of a standing invariant (DESIGN.md sections 13 and
+  17) fails the suite, not just the standalone lint target.
 * **Fixtures** — each known-bad file under `tests/fixtures/lint/`
   encodes one violation class; the linter must report the specific
   finding code (not merely "some finding") and must not drown it in
@@ -22,6 +22,7 @@ import pytest
 
 from tools.repro_lint import run
 from tools.repro_lint.cachecheck import check_cache_file
+from tools.repro_lint.concurrency import lint_concurrency_file
 from tools.repro_lint.contracts import check_kernel_geometry
 from tools.repro_lint.findings import CODES
 from tools.repro_lint.invariants import lint_file
@@ -65,10 +66,41 @@ def test_cache_cli_never_imports_jax():
     assert r.returncode == 0, "cachecheck must stay jax-free"
 
 
+def test_concurrency_engine_never_imports_jax():
+    # the `--concurrency` make-lint leg must stay a stdlib-only pass,
+    # like Engine 1 — both importing the module AND running it
+    probe = ("import sys; "
+             "from tools.repro_lint.concurrency import check_concurrency; "
+             "check_concurrency(['src/repro/stream', 'src/repro/testing']); "
+             "sys.exit(1 if 'jax' in sys.modules else 0)")
+    r = subprocess.run([sys.executable, "-c", probe],
+                       cwd=REPO, capture_output=True, text=True)
+    assert r.returncode == 0, "concurrency engine must stay jax-free"
+
+
+def test_concurrency_cli_exit_codes():
+    clean = subprocess.run(
+        [sys.executable, "-m", "tools.repro_lint", "--concurrency",
+         str(REPO / "src"), str(REPO / "benchmarks")],
+        cwd=REPO, capture_output=True, text=True)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    dirty = subprocess.run(
+        [sys.executable, "-m", "tools.repro_lint", "--concurrency",
+         str(FIXTURES / "concurrency" / "bad_worker_state.py")],
+        cwd=REPO, capture_output=True, text=True)
+    assert dirty.returncode == 1
+    assert "RL403" in dirty.stdout
+    usage = subprocess.run(
+        [sys.executable, "-m", "tools.repro_lint", "--concurrency"],
+        cwd=REPO, capture_output=True, text=True)
+    assert usage.returncode == 2
+
+
 def test_every_code_documented():
     assert all(code.startswith("RL") for code in CODES)
     for findings_source in ("RL101", "RL105", "RL107", "RL108", "RL109",
-                            "RL201", "RL210", "RL212", "RL301", "RL303"):
+                            "RL201", "RL210", "RL212", "RL301", "RL303",
+                            "RL401", "RL402", "RL403", "RL404", "RL405"):
         assert findings_source in CODES
 
 
@@ -119,6 +151,76 @@ def test_fixture_obs_in_jit():
     assert len(f) == 2
     assert not any("fixture.reports" in x.message or "'report'" in x.message
                    for x in f)
+
+
+# --- Engine 3 fixtures (concurrency contracts) ----------------------------
+
+CFIX = FIXTURES / "concurrency"
+
+
+def test_fixture_undeclared_policy():
+    f = lint_concurrency_file(CFIX / "bad_undeclared.py")
+    assert codes(f) == ["RL401"]
+    # thread spawner without a policy, the uncovered attribute, the
+    # malformed grammar, and the attribute the malformed entry was
+    # meant to cover
+    assert len(f) == 4
+
+
+def test_fixture_publish_site():
+    f = lint_concurrency_file(CFIX / "bad_publish_site.py")
+    assert codes(f) == ["RL402"]
+    assert len(f) == 2          # off-site write + on-site RMW
+    msgs = " ".join(x.message for x in f)
+    assert "read-modify-writes" in msgs and "'sneak'" in msgs
+    # the clean publish at its declared site must NOT fire
+    assert "'publish'" not in msgs
+
+
+def test_fixture_compound_mutation():
+    f = lint_concurrency_file(CFIX / "bad_compound_mutation.py")
+    assert codes(f) == ["RL402"]
+    # subscript + compound mutation, immutable write, unlocked touch
+    assert len(f) == 4
+    msgs = " ".join(x.message for x in f)
+    assert "'record'" not in msgs    # the locked access must NOT fire
+
+
+def test_fixture_worker_state():
+    f = lint_concurrency_file(CFIX / "bad_worker_state.py")
+    assert codes(f) == ["RL403"]
+    assert len(f) == 2          # stop()'s read and write of _carry
+    assert all("'stop'" in x.message for x in f)
+    # _run/_drain sit inside the worker's call graph: must NOT fire
+
+
+def test_fixture_lock_blocking():
+    f = lint_concurrency_file(CFIX / "bad_lock_blocking.py")
+    assert codes(f) == ["RL404"]
+    # solve + result() + get() + join(), all under the declared lock;
+    # the timeout-bounded variants must NOT fire
+    assert len(f) == 4
+    assert all("'refresh'" in x.message for x in f)
+
+
+def test_fixture_dropped_future():
+    f = lint_concurrency_file(CFIX / "bad_dropped_future.py")
+    assert codes(f) == ["RL405"]
+    assert len(f) == 2          # never handed off + raise before handoff
+    msgs = " ".join(x.message for x in f)
+    assert "'lost'" in msgs
+    # the validate-then-mint pattern in clean() must NOT fire
+
+
+def test_pre_fix_serving_fixture_is_flagged():
+    # the executable pre-fix front (tests/fixtures/serving_pre_fix.py,
+    # replayed dynamically in test_interleave.py) must also fall to the
+    # STATIC checker: its stop() touches worker-owned state
+    f = lint_concurrency_file(REPO / "tests" / "fixtures"
+                              / "serving_pre_fix.py")
+    assert codes(f) == ["RL403"]
+    assert len(f) == 3          # the condition read, the append read,
+    assert all("_carry" in x.message for x in f)   # the clearing write
 
 
 # --- Engine 2 geometry fixture -------------------------------------------

@@ -1,6 +1,6 @@
 """repro_lint: the repo-native static-analysis pass.
 
-Two engines plus a cache validator, all runnable via
+Three engines plus a cache validator, all runnable via
 `python -m tools.repro_lint` (see `__main__.py`):
 
 * Engine 1 (`invariants.py`) — AST lints enforcing ROADMAP.md's
@@ -10,6 +10,9 @@ Two engines plus a cache validator, all runnable via
   byte models and routing predicates evaluated over an adversarial
   shape×block grid. Imports the repro package (and so jax), executes
   no kernel, needs no TPU.
+* Engine 3 (`concurrency.py`) — concurrency contract checks (RL4xx)
+  over declared `_SYNC_POLICY` maps in thread-spawning/thread-shared
+  classes. Pure stdlib, never imports jax.
 * `--cache` (`cachecheck.py`) — committed autotune-cache key/value
   shape validation (RL3xx). Pure stdlib.
 
@@ -25,10 +28,14 @@ __all__ = ["CODES", "Finding", "check_cache_file", "lint_file",
            "lint_paths", "run"]
 
 
-def run(paths, *, contracts: bool = True):
-    """Full lint: Engine 1 over `paths`, plus Engine 2 when
-    `contracts` (imports jax transitively). Returns sorted findings."""
+def run(paths, *, contracts: bool = True, concurrency: bool = True):
+    """Full lint: Engine 1 over `paths`, Engine 3 when `concurrency`
+    (still pure stdlib), plus Engine 2 when `contracts` (imports jax
+    transitively). Returns sorted findings."""
     findings = lint_paths(paths)
+    if concurrency:
+        from tools.repro_lint.concurrency import check_concurrency
+        findings.extend(check_concurrency(paths))
     if contracts:
         from tools.repro_lint.contracts import check_contracts
         findings.extend(check_contracts(paths))

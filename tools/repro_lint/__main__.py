@@ -1,7 +1,8 @@
 """CLI for the repro static-analysis pass.
 
-    python -m tools.repro_lint src benchmarks      # both engines
-    python -m tools.repro_lint --no-contracts src  # Engine 1 only (no jax)
+    python -m tools.repro_lint src benchmarks      # all engines
+    python -m tools.repro_lint --no-contracts src  # skip Engine 2 (no jax)
+    python -m tools.repro_lint --concurrency src   # Engine 3 only (no jax)
     python -m tools.repro_lint --cache             # cache file only (no jax)
     python -m tools.repro_lint --cache .cache/autotune.json
 
@@ -28,13 +29,22 @@ def main(argv=None) -> int:
                          "imports jax")
     ap.add_argument("--no-contracts", action="store_true",
                     help="skip Engine 2 (the jax-importing dispatch-"
-                         "contract grid); Engine 1 AST lints only")
+                         "contract grid); AST lints only")
+    ap.add_argument("--concurrency", action="store_true",
+                    help="run only Engine 3, the concurrency contract "
+                         "checker (RL4xx); pure stdlib, never imports jax")
     args = ap.parse_args(argv)
 
     if args.cache is not None:
         from tools.repro_lint.cachecheck import check_cache_file
         findings = check_cache_file(args.cache)
         label = f"cache check over {args.cache}"
+    elif args.concurrency:
+        if not args.paths:
+            ap.error("give paths to lint with --concurrency")
+        from tools.repro_lint.concurrency import check_concurrency
+        findings = check_concurrency(args.paths)
+        label = f"concurrency lint over {' '.join(args.paths)}"
     else:
         if not args.paths:
             ap.error("give paths to lint, or --cache")

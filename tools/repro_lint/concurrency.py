@@ -1,0 +1,567 @@
+"""Engine 3: concurrency contract checker (RL401-RL405).
+
+Pure stdlib — like Engine 1, importing and running this module never
+imports jax, so the `--concurrency` CLI leg stays accelerator-free.
+
+The serving stack (PR 8/9) keeps its predictions coherent through a
+small set of synchronization conventions — single-assignment atomic
+publication of immutable snapshots, worker-thread-only queue state,
+lock-guarded registries — that until this engine existed only as
+docstrings. Here they become *declared* contracts: a class that spawns
+threads (or is shared across them) carries a `_SYNC_POLICY` class
+attribute mapping each shared instance attribute to the discipline that
+keeps it coherent, and the checker proves the class body honors the
+declaration. DESIGN.md §17 documents the schema and every code.
+
+`_SYNC_POLICY` is a dict literal of attribute name -> policy string
+(a `"*"` key declares the default for attributes not named):
+
+* ``"atomic-publish[:site,...]"`` — the attribute is published by
+  whole-object single assignment of a locally built value (atomic under
+  the GIL), only inside ``__init__`` and the enumerated method sites.
+  Compound (``+=``) or subscript mutation anywhere, assignment outside
+  the site set, or a read-modify-write (the attribute appearing in its
+  own right-hand side) is RL402.
+* ``"worker-only:entry[,extra...]"`` — the attribute is touched (read
+  OR written) only inside the intra-class call-graph closure of the
+  worker entry method (plus explicitly enumerated extra roots, plus
+  ``__init__``, which happens-before the thread exists). The closure is
+  the same intra-module BFS RL103 uses for dispatcher validation. Any
+  access outside it is RL403.
+* ``"lock:<name>"`` — every access outside ``__init__`` sits lexically
+  inside ``with self.<name>``; a naked access is RL402. Additionally,
+  RL404 flags blocking calls made while any declared lock is held:
+  an engine solve (``refit`` / ``solve_*``), a bare ``.result()``, a
+  timeout-less ``.get()``, or a timeout-less ``.join()`` — each can
+  stall every other thread contending for the lock.
+* ``"immutable-after-init"`` — written (or mutated) only in
+  ``__init__``; reads need no synchronization afterwards. Any later
+  write is RL402.
+
+A class is *checked* when it declares `_SYNC_POLICY` or when it spawns
+threads (`threading.Thread(...)` anywhere in its body); a thread
+spawner with no declaration, or a checked class with an undeclared
+shared attribute (and no `"*"` default), is RL401.
+
+RL405 is module-scoped rather than class-scoped: a
+`concurrent.futures.Future` constructed in library code must, in its
+enclosing function, either be resolved (`set_result`/`set_exception`/
+`cancel`), handed off (passed as a call argument — e.g. wrapped into a
+request record that goes to the worker queue), or returned; and no
+`raise`/`return` exit path may sit between its creation and the first
+handoff. A dropped future strands its caller forever — the serving
+front's `submit` contract exists precisely to prevent that.
+
+Files in scope: everything under `src/repro/stream/` and
+`src/repro/serving/`, plus any linted module that imports `threading`
+or `concurrent.futures`.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from tools.repro_lint.findings import Finding
+from tools.repro_lint.invariants import (
+    ModuleLint, dotted_name, iter_py_files,
+)
+
+POLICY_ATTR = "_SYNC_POLICY"
+
+# directories whose modules are always in scope, threading import or not
+SCOPE_DIR_RE = re.compile(r"(^|/)repro/(stream|serving)/")
+
+# call names whose completion depends on other threads' progress — held
+# across a declared lock they convert contention into a stall (RL404)
+SOLVE_CALL_RE = re.compile(r"^(refit|_refit\w*|solve_\w+)$")
+
+_POLICIES = ("atomic-publish", "worker-only", "lock", "immutable-after-init")
+
+
+# --- access model ----------------------------------------------------------
+
+class Access:
+    """One `self.<attr>` touch inside a method body."""
+
+    __slots__ = ("attr", "kind", "node", "locks", "rmw")
+
+    def __init__(self, attr: str, kind: str, node: ast.AST,
+                 locks: frozenset, rmw: bool = False):
+        self.attr = attr
+        self.kind = kind          # "read" | "write" | "mutate"
+        self.node = node
+        self.locks = locks        # lexically held `with self.<lock>` names
+        self.rmw = rmw            # write whose RHS reads the same attr
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _attr_reads(expr: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(expr):
+        attr = _self_attr(node)
+        if attr is not None:
+            out.add(attr)
+    return out
+
+
+class _MethodScan(ast.NodeVisitor):
+    """Collects every self-attribute access, every `self.m()` call edge,
+    and every call made under a held `with self.<lock>` block."""
+
+    def __init__(self) -> None:
+        self.accesses: List[Access] = []
+        self.calls: Set[str] = set()                  # self.m() edges
+        self.locked_calls: List[Tuple[ast.Call, frozenset]] = []
+        self._locks: Tuple[str, ...] = ()
+
+    # -- helpers ----------------------------------------------------------
+
+    def _held(self) -> frozenset:
+        return frozenset(self._locks)
+
+    def _record_store(self, target: ast.AST, value: Optional[ast.AST],
+                      root: ast.AST) -> None:
+        attr = _self_attr(target)
+        if attr is not None:
+            rmw = value is not None and attr in _attr_reads(value)
+            self.accesses.append(
+                Access(attr, "write", root, self._held(), rmw=rmw))
+            return
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._record_store(elt, value, root)
+            return
+        if isinstance(target, ast.Subscript):
+            base = _self_attr(target.value)
+            if base is not None:
+                self.accesses.append(
+                    Access(base, "mutate", root, self._held()))
+            else:
+                self.visit(target.value)
+            self.visit(target.slice)
+            return
+        if isinstance(target, ast.Attribute):
+            # store onto a non-self object: its base is still read
+            self.visit(target.value)
+
+    # -- statements -------------------------------------------------------
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for tgt in node.targets:
+            self._record_store(tgt, node.value, node)
+        self.visit(node.value)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        attr = _self_attr(node.target)
+        if attr is not None:
+            self.accesses.append(
+                Access(attr, "mutate", node, self._held(), rmw=True))
+        elif isinstance(node.target, ast.Subscript):
+            base = _self_attr(node.target.value)
+            if base is not None:
+                self.accesses.append(
+                    Access(base, "mutate", node, self._held()))
+            else:
+                self.visit(node.target)
+        else:
+            self.visit(node.target)
+        self.visit(node.value)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self._record_store(node.target, node.value, node)
+            self.visit(node.value)
+
+    def visit_Delete(self, node: ast.Delete) -> None:
+        for tgt in node.targets:
+            attr = _self_attr(tgt)
+            if attr is not None:
+                self.accesses.append(
+                    Access(attr, "write", node, self._held()))
+            else:
+                self.visit(tgt)
+
+    def visit_With(self, node: ast.With) -> None:
+        acquired = []
+        for item in node.items:
+            lock = _self_attr(item.context_expr)
+            if lock is not None:
+                # the lock attribute itself is read at acquisition
+                self.accesses.append(
+                    Access(lock, "read", item.context_expr, self._held()))
+                acquired.append(lock)
+            else:
+                self.visit(item.context_expr)
+            if item.optional_vars is not None:
+                self.visit(item.optional_vars)
+        self._locks = self._locks + tuple(acquired)
+        for stmt in node.body:
+            self.visit(stmt)
+        if acquired:
+            self._locks = self._locks[:-len(acquired)]
+
+    # -- expressions --------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if self._locks:
+            self.locked_calls.append((node, self._held()))
+        attr = _self_attr(node.func)
+        if attr is not None:
+            self.calls.add(attr)
+            self.accesses.append(
+                Access(attr, "read", node.func, self._held()))
+        else:
+            self.visit(node.func)
+        for arg in node.args:
+            self.visit(arg)
+        for kw in node.keywords:
+            self.visit(kw.value)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        attr = _self_attr(node)
+        if attr is not None:
+            self.accesses.append(
+                Access(attr, "read", node, self._held()))
+            return
+        self.visit(node.value)
+
+
+def scan_method(fn: ast.FunctionDef) -> _MethodScan:
+    scan = _MethodScan()
+    for stmt in fn.body:
+        scan.visit(stmt)
+    return scan
+
+
+# --- policy parsing --------------------------------------------------------
+
+class Policy:
+    __slots__ = ("kind", "sites")
+
+    def __init__(self, kind: str, sites: Tuple[str, ...] = ()):
+        self.kind = kind
+        self.sites = sites
+
+
+def parse_policy(text: str) -> Optional[Policy]:
+    """"atomic-publish:publish_model" -> Policy; None when malformed."""
+    kind, _, rest = text.partition(":")
+    sites = tuple(s.strip() for s in rest.split(",") if s.strip()) \
+        if rest else ()
+    if kind == "atomic-publish":
+        return Policy(kind, sites)
+    if kind == "worker-only":
+        return Policy(kind, sites) if sites else None
+    if kind == "lock":
+        return Policy(kind, sites) if len(sites) == 1 else None
+    if kind == "immutable-after-init":
+        return Policy(kind) if not rest else None
+    return None
+
+
+def extract_sync_policy(cls: ast.ClassDef) -> Tuple[Optional[dict], bool]:
+    """(raw {attr: policy-string} or None, well_formed). The declaration
+    must be a dict literal of constant strings — the checker reads it
+    statically, so computed policies would be unenforceable."""
+    for node in cls.body:
+        target = None
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            target, value = node.targets[0], node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            target, value = node.target, node.value
+        else:
+            continue
+        if not (isinstance(target, ast.Name) and target.id == POLICY_ATTR):
+            continue
+        if not isinstance(value, ast.Dict):
+            return None, False
+        out = {}
+        for k, v in zip(value.keys, value.values):
+            if not (isinstance(k, ast.Constant) and isinstance(k.value, str)
+                    and isinstance(v, ast.Constant)
+                    and isinstance(v.value, str)):
+                return None, False
+            out[k.value] = v.value
+        return out, True
+    return None, True
+
+
+# --- class-level checks ----------------------------------------------------
+
+def _class_methods(cls: ast.ClassDef) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _closure(roots: Iterable[str], calls: Dict[str, Set[str]]) -> Set[str]:
+    """Transitive closure over the intra-class `self.m()` call graph —
+    the same BFS RL103 runs over a module's dispatcher helpers."""
+    seen: Set[str] = set()
+    stack = list(roots)
+    while stack:
+        name = stack.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        stack.extend(calls.get(name, ()))
+    return seen
+
+
+def _spawns_thread(mod: ModuleLint, cls: ast.ClassDef) -> bool:
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Call):
+            if mod.canonical(node.func) == "threading.Thread":
+                return True
+    return False
+
+
+def _is_blocking_call(call: ast.Call) -> Optional[str]:
+    """The RL404 taxonomy: calls that park the calling thread on
+    another thread's progress."""
+    if isinstance(call.func, ast.Attribute):
+        meth = call.func.attr
+        if meth == "result" and not call.args and not call.keywords:
+            return "Future.result() with no timeout"
+        if meth == "get" and not call.args and \
+                not any(kw.arg == "timeout" for kw in call.keywords):
+            return "Queue.get() with no timeout"
+        if meth == "join" and not call.args and \
+                not any(kw.arg == "timeout" for kw in call.keywords):
+            return "join() with no timeout"
+    name = dotted_name(call.func)
+    leaf = name.split(".")[-1] if name else ""
+    if SOLVE_CALL_RE.match(leaf):
+        return f"engine solve '{leaf}'"
+    return None
+
+
+def check_class(mod: ModuleLint, cls: ast.ClassDef) -> None:
+    raw, well_formed = extract_sync_policy(cls)
+    spawns = _spawns_thread(mod, cls)
+    if not well_formed:
+        mod.flag(cls, "RL401",
+                 f"class '{cls.name}': {POLICY_ATTR} must be a dict "
+                 f"literal of constant strings (attr -> policy)")
+        return
+    if raw is None:
+        if spawns:
+            mod.flag(cls, "RL401",
+                     f"class '{cls.name}' spawns threads but declares no "
+                     f"{POLICY_ATTR} — every shared attribute needs a "
+                     f"sync policy (DESIGN.md §17)")
+        return
+
+    methods = _class_methods(cls)
+    scans = {name: scan_method(fn) for name, fn in methods.items()}
+    calls = {name: {c for c in scan.calls if c in methods}
+             for name, scan in scans.items()}
+
+    policies: Dict[str, Policy] = {}
+    default: Optional[Policy] = None
+    for attr, text in raw.items():
+        pol = parse_policy(text)
+        if pol is None:
+            mod.flag(cls, "RL401",
+                     f"class '{cls.name}': malformed policy '{text}' for "
+                     f"'{attr}' (want atomic-publish[:sites] / "
+                     f"worker-only:entry[,extra] / lock:<name> / "
+                     f"immutable-after-init)")
+            continue
+        if attr == "*":
+            default = pol
+        else:
+            policies[attr] = pol
+
+    # instance attributes this class owns = everything it ever assigns
+    assigned: Dict[str, ast.AST] = {}
+    for name, scan in scans.items():
+        for acc in scan.accesses:
+            if acc.kind in ("write", "mutate") and acc.attr not in assigned:
+                assigned[acc.attr] = acc.node
+    for attr, first in sorted(assigned.items()):
+        if attr not in policies:
+            if default is None:
+                mod.flag(first, "RL401",
+                         f"class '{cls.name}': shared attribute "
+                         f"'{attr}' has no declared sync policy and "
+                         f"{POLICY_ATTR} has no '*' default")
+            else:
+                policies[attr] = default
+
+    declared_locks = {p.sites[0] for p in policies.values()
+                      if p.kind == "lock"}
+
+    # worker-only closures, one per distinct root set
+    closures: Dict[Tuple[str, ...], Set[str]] = {}
+    for pol in policies.values():
+        if pol.kind == "worker-only" and pol.sites not in closures:
+            closures[pol.sites] = _closure(pol.sites, calls)
+
+    for mname, scan in scans.items():
+        in_init = mname == "__init__"
+        for acc in scan.accesses:
+            pol = policies.get(acc.attr)
+            if pol is None:
+                continue
+            if pol.kind == "immutable-after-init":
+                if acc.kind in ("write", "mutate") and not in_init:
+                    mod.flag(acc.node, "RL402",
+                             f"'{acc.attr}' is immutable-after-init but "
+                             f"'{mname}' writes it")
+            elif pol.kind == "atomic-publish":
+                if acc.kind == "mutate" and not in_init:
+                    mod.flag(acc.node, "RL402",
+                             f"'{acc.attr}' is atomic-publish but "
+                             f"'{mname}' mutates it in place (compound/"
+                             f"subscript) — build a new value and "
+                             f"single-assign it")
+                elif acc.kind == "write" and not in_init:
+                    if mname not in pol.sites:
+                        mod.flag(acc.node, "RL402",
+                                 f"'{acc.attr}' is atomic-publish with "
+                                 f"closed site set "
+                                 f"{{{', '.join(pol.sites) or '__init__'}}}"
+                                 f" but '{mname}' assigns it")
+                    elif acc.rmw:
+                        mod.flag(acc.node, "RL402",
+                                 f"'{acc.attr}' is atomic-publish but "
+                                 f"'{mname}' read-modify-writes it — "
+                                 f"the read and the publish are not one "
+                                 f"atomic step")
+            elif pol.kind == "worker-only":
+                allowed = closures[pol.sites]
+                if not in_init and mname not in allowed:
+                    mod.flag(acc.node, "RL403",
+                             f"'{acc.attr}' is worker-only (entry "
+                             f"'{pol.sites[0]}') but '{mname}' touches "
+                             f"it outside the worker's call graph")
+            elif pol.kind == "lock":
+                lock = pol.sites[0]
+                if not in_init and lock not in acc.locks:
+                    mod.flag(acc.node, "RL402",
+                             f"'{acc.attr}' requires 'with self.{lock}' "
+                             f"but '{mname}' touches it without the "
+                             f"lock held")
+        # RL404: blocking calls under any declared lock
+        for call, locks in scan.locked_calls:
+            if not (locks & declared_locks):
+                continue
+            why = _is_blocking_call(call)
+            if why is not None:
+                held = ", ".join(sorted(locks & declared_locks))
+                mod.flag(call, "RL404",
+                         f"blocking call ({why}) in '{mname}' while "
+                         f"holding declared lock(s) {held}")
+
+
+# --- RL405: dropped futures ------------------------------------------------
+
+def _future_locals(mod: ModuleLint,
+                   fn: ast.FunctionDef) -> Dict[str, ast.AST]:
+    out: Dict[str, ast.AST] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if mod.canonical(node.value.func) == "concurrent.futures.Future":
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        out[tgt.id] = node
+    return out
+
+
+def _mentions_name(node: ast.AST, name: str) -> bool:
+    return any(isinstance(n, ast.Name) and n.id == name
+               for n in ast.walk(node))
+
+
+def check_dropped_futures(mod: ModuleLint) -> None:
+    for fn in [n for n in ast.walk(mod.tree)
+               if isinstance(n, ast.FunctionDef)]:
+        futures = _future_locals(mod, fn)
+        if not futures:
+            continue
+        for var, created in futures.items():
+            handoffs: List[int] = []
+            exits: List[Tuple[int, ast.AST]] = []
+            for node in ast.walk(fn):
+                line = getattr(node, "lineno", 0)
+                if isinstance(node, ast.Call):
+                    if isinstance(node.func, ast.Attribute) and \
+                            isinstance(node.func.value, ast.Name) and \
+                            node.func.value.id == var and node.func.attr in (
+                                "set_result", "set_exception", "cancel"):
+                        handoffs.append(line)
+                    elif any(_mentions_name(a, var) for a in node.args) or \
+                            any(_mentions_name(kw.value, var)
+                                for kw in node.keywords):
+                        handoffs.append(line)
+                elif isinstance(node, ast.Return):
+                    if node.value is not None and \
+                            _mentions_name(node.value, var):
+                        handoffs.append(line)
+                    else:
+                        exits.append((line, node))
+                elif isinstance(node, ast.Raise):
+                    exits.append((line, node))
+            if not handoffs:
+                mod.flag(created, "RL405",
+                         f"'{var}' is a Future that '{fn.name}' neither "
+                         f"resolves, returns, nor hands off — its waiter "
+                         f"blocks forever")
+                continue
+            first = min(handoffs)
+            born = created.lineno
+            for line, node in exits:
+                if born < line < first:
+                    mod.flag(node, "RL405",
+                             f"exit path leaves Future '{var}' (created "
+                             f"line {born}) unresolved before its first "
+                             f"handoff (line {first})")
+
+
+# --- driver ----------------------------------------------------------------
+
+def _in_scope(mod: ModuleLint) -> bool:
+    if SCOPE_DIR_RE.search(mod.rel.replace("\\", "/")):
+        return True
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                head = a.name.split(".")[0]
+                if head in ("threading", "concurrent"):
+                    return True
+        elif isinstance(node, ast.ImportFrom) and node.module and \
+                node.level == 0:
+            if node.module.split(".")[0] in ("threading", "concurrent"):
+                return True
+    return False
+
+
+def lint_concurrency_file(path, rel: str | None = None) -> List[Finding]:
+    rel = rel if rel is not None else str(path)
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:
+        return [Finding(rel, e.lineno or 0, "RL100",
+                        f"syntax error: {e.msg}")]
+    mod = ModuleLint(path, rel, tree)
+    if not _in_scope(mod):
+        return []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            check_class(mod, node)
+    check_dropped_futures(mod)
+    return mod.findings
+
+
+def check_concurrency(paths: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in iter_py_files(paths):
+        findings.extend(lint_concurrency_file(path))
+    return sorted(findings)

@@ -6,7 +6,8 @@ Codes are grouped by engine: RL1xx are AST invariant lints (pure
 stdlib, no jax import), RL2xx are static tiling/VMEM contract checks
 (import the dispatchers' own byte models and predicates, execute
 nothing), RL3xx validate a committed autotune cache file (pure JSON,
-no jax).
+no jax), RL4xx are concurrency contract checks over declared
+`_SYNC_POLICY` maps (pure stdlib, no jax).
 """
 from __future__ import annotations
 
@@ -57,4 +58,17 @@ CODES = {
     "RL302": "autotune cache key has an unknown namespace or malformed "
              "dimension spec",
     "RL303": "autotune cache value has the wrong shape for its kernel",
+    # Engine 3 — concurrency contract checks (concurrency.py)
+    "RL401": "shared attribute of a thread-spawning/thread-shared class "
+             "has no declared _SYNC_POLICY entry (or the policy is "
+             "malformed)",
+    "RL402": "access violates the attribute's declared sync policy "
+             "(atomic-publish site set / read-modify-write, "
+             "immutable-after-init write, lock discipline)",
+    "RL403": "worker-only attribute reached from outside the worker's "
+             "call graph",
+    "RL404": "blocking call (engine solve, Future.result, timeout-less "
+             "Queue.get/join) while a declared lock is held",
+    "RL405": "Future created with an exit path that neither resolves it "
+             "nor hands it off",
 }
